@@ -1,0 +1,99 @@
+"""Paper Fig. 10/11 analog: end-to-end retrieval accuracy on a TRAINED model.
+
+The paper's headline accuracy result: RetroInfer is the only sparse system
+matching full attention on RULER/NIAH. At container scale we train a small
+transformer on associative recall (the miniature needle task — the queried
+pair sits at arbitrary depth), then evaluate recall accuracy at a LONGER
+context than training under (a) full attention and (b) the wave-index
+runtime at the paper's ~1.8%-style budget, plus top-1 agreement between the
+two runtimes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import AttnConfig, ModelConfig, RetroConfig
+from repro.core.zones import plan_zones
+from repro.data.pipeline import assoc_recall_batch
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import init_train_state, make_train_step
+
+VOCAB = 128
+RETRO = RetroConfig(avg_cluster=8, cluster_cap=16, prefill_segment=128,
+                    update_segment=64, sink=4, local=32,
+                    retrieval_frac=0.08, estimation_frac=0.3, kmeans_iters=4)
+
+CFG = ModelConfig(
+    arch_id="niah", family="dense", n_layers=2, d_model=128, d_ff=256,
+    vocab=VOCAB, attn=AttnConfig(n_heads=4, n_kv_heads=4, head_dim=32),
+    dtype="float32", retro=RETRO)
+
+
+def _repeated_pair_stream(rng, batch, n_distinct, n_draws, vocab):
+    """Streams of (k, v) tokens drawn WITH replacement from n_distinct pairs:
+    values become predictable from their 2nd occurrence on — dense induction
+    signal for every repeated key."""
+    lo_k, hi_k = 2, vocab // 2
+    lo_v, hi_v = vocab // 2, vocab
+    T = 2 * n_draws
+    toks = np.empty((batch, T), np.int32)
+    for b in range(batch):
+        keys = rng.choice(np.arange(lo_k, hi_k), size=n_distinct,
+                          replace=False)
+        vals = rng.integers(lo_v, hi_v, size=n_distinct)
+        idx = rng.integers(0, n_distinct, size=n_draws)
+        toks[b, 0::2] = keys[idx]
+        toks[b, 1::2] = vals[idx]
+    return toks
+
+
+def train_model(steps=700, batch=64, seed=0):
+    rng = np.random.default_rng(seed)
+    state = init_train_state(CFG, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(
+        CFG, AdamWConfig(lr=1e-2, warmup_steps=30, total_steps=steps,
+                         weight_decay=0.01)))
+    loss = None
+    for i in range(steps):
+        toks = _repeated_pair_stream(rng, batch, 6, 16, VOCAB)
+        state, m = step_fn(state, {"tokens": jnp.asarray(toks[:, :-1]),
+                                   "targets": jnp.asarray(toks[:, 1:])})
+        loss = float(m["loss"])
+    return state.params, loss
+
+
+def eval_accuracy(params, runtime: str, n_pairs: int, seq: int,
+                  n_eval: int = 64, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    plan = plan_zones(seq, CFG.retro, 128)
+
+    @jax.jit
+    def prefill(params, tokens):
+        return M.apply_prefill(params, CFG, {"tokens": tokens},
+                               runtime=runtime, plan=plan, gen_headroom=128)
+
+    toks, tgt = assoc_recall_batch(rng, n_eval, n_pairs, VOCAB, seq=seq)
+    logits, _ = prefill(params, jnp.asarray(toks))
+    pred = np.asarray(jnp.argmax(logits, -1))
+    return float((pred == tgt).mean()), pred
+
+
+def run():
+    params, final_loss = train_model()
+    emit("fig10_niah_train", 0.0, f"final_masked_loss={final_loss:.3f}")
+    # evaluate at 2x the trained pair count (length generalization, 512 ctx)
+    for n_pairs, seq in ((24, 256), (48, 512)):
+        acc_f, pred_f = eval_accuracy(params, "full", n_pairs, seq)
+        acc_r, pred_r = eval_accuracy(params, "retro", n_pairs, seq)
+        agree = float((pred_f == pred_r).mean())
+        emit(f"fig10_niah_pairs{n_pairs}_full", 0.0, f"acc={acc_f:.3f}")
+        emit(f"fig10_niah_pairs{n_pairs}_retro", 0.0,
+             f"acc={acc_r:.3f};top1_agreement_vs_full={agree:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Paper Fig. 15: prefill latency — index construction overhead.
+
+The paper: segmented clustering adds only 3-6% to full-attention prefill.
+We time prefill with runtime="full" (no index) vs runtime="retro" (index
+built via segmented k-means) on a small dense model.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, timeit, tiny_retro
+from repro.configs.base import AttnConfig, InputShape, ModelConfig
+from repro.configs.registry import materialize_batch
+from repro.core.zones import plan_zones
+from repro.models import model as M
+
+
+def run():
+    retro = tiny_retro(kmeans_iters=10)
+    cfg = ModelConfig(
+        arch_id="bench-prefill", family="dense", n_layers=4, d_model=256,
+        d_ff=512, vocab=1024,
+        attn=AttnConfig(n_heads=8, n_kv_heads=4, head_dim=32),
+        dtype="float32", retro=retro)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    for S in (2048, 8192):
+        batch = materialize_batch(cfg, InputShape("p", S, 1, "prefill"))
+        plan = plan_zones(S, retro, 256)
+
+        full_fn = jax.jit(lambda p, b: M.apply_prefill(
+            p, cfg, b, runtime="full", gen_headroom=256)[0])
+        retro_fn = jax.jit(lambda p, b: M.apply_prefill(
+            p, cfg, b, runtime="retro", plan=plan, gen_headroom=256)[0])
+        us_f = timeit(full_fn, params, batch, iters=3)
+        us_r = timeit(retro_fn, params, batch, iters=3)
+        emit(f"fig15_prefill{S}_full", us_f, "baseline")
+        emit(f"fig15_prefill{S}_retro", us_r,
+             f"index_overhead={100 * (us_r - us_f) / us_f:.1f}%")
+
+
+if __name__ == "__main__":
+    run()

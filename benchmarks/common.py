@@ -1,0 +1,40 @@
+"""Benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (derived = the
+figure-specific metric, e.g. accuracy or bytes ratio).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time per call in microseconds."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def tiny_retro(**kw):
+    from repro.configs.base import RetroConfig
+    base = dict(avg_cluster=16, cluster_cap=32, prefill_segment=512,
+                update_segment=256, sink=4, local=64, kmeans_iters=5)
+    base.update(kw)
+    return RetroConfig(**base)

@@ -1,0 +1,34 @@
+# One benchmark per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy_budget, bench_cache,
+                            bench_estimation, bench_longgen, bench_niah,
+                            bench_prefill, bench_segment_size,
+                            bench_throughput)
+    suites = [
+        ("fig18_accuracy_vs_budget", bench_accuracy_budget.run),
+        ("fig19a_estimation", bench_estimation.run),
+        ("fig19b_segment_size", bench_segment_size.run),
+        ("fig13_decode_throughput", bench_throughput.run),
+        ("fig16_wave_buffer", bench_cache.run),
+        ("fig15_prefill_overhead", bench_prefill.run),
+        ("fig17b_long_generation", bench_longgen.run),
+        ("fig10_niah_trained_model", bench_niah.run),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,us_per_call,derived")
+    for name, fn in suites:
+        if only and only not in name:
+            continue
+        t0 = time.time()
+        fn()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,49 @@
+"""Beyond-paper demo: distributed wave attention (shard_map local retrieval +
+LSE psum) vs the serial path, on 8 simulated devices.
+
+    PYTHONPATH=src python examples/distributed_retrieval.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RetroConfig
+from repro.core.attention import wave_attention_decode
+from repro.core.distributed import distributed_wave_attention
+from repro.core.wave_index import max_clusters, prefill_build
+from repro.core.zones import plan_zones
+from repro.data.pipeline import clustered_keys
+
+
+def main():
+    n, hd = 16384, 64
+    retro = RetroConfig(avg_cluster=16, cluster_cap=32, prefill_segment=1024,
+                        update_segment=256, sink=4, local=64, kmeans_iters=5)
+    keys, q, hot = clustered_keys(n, hd, n_hot=8, seed=0)
+    vals = np.random.default_rng(1).standard_normal((n, hd)).astype(np.float32)
+    k = jnp.asarray(keys)[None, :, None, :]
+    v = jnp.asarray(vals)[None, :, None, :]
+    state = prefill_build(k, v, retro, max_clusters(n, retro, 256),
+                          dtype=jnp.float32)
+    qj = jnp.asarray(q)[None, None, :]
+    plan = plan_zones(n, retro, 256)
+
+    serial = wave_attention_decode(qj, state, retro, plan).out
+    for n_dev in (1, 2, 4, 8):
+        mesh = jax.make_mesh((n_dev,), ("model",))
+        dist = distributed_wave_attention(qj, state, retro, plan, mesh)
+        rel = float(jnp.linalg.norm(dist - serial)
+                    / jnp.linalg.norm(serial))
+        print(f"shards={n_dev}: local top-{max(1, -(-plan.r // n_dev))} "
+              f"per shard, rel diff vs serial global top-{plan.r}: {rel:.5f}")
+    print("collective payload per step: one (num, den, max) psum = "
+          f"{(hd + 2) * 4} bytes/head vs "
+          f"{plan.r * retro.cluster_cap * hd * 2 * 4} bytes of KV blocks "
+          "for a cross-shard gather")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""gemma2-2b — local/global alternating, logit softcap [arXiv:2408.00118]."""
+from repro.configs.base import AttnConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma2-2b", family="dense",
+    n_layers=26, d_model=2304, d_ff=9216, vocab=256000,
+    attn=AttnConfig(n_heads=8, n_kv_heads=4, head_dim=256,
+                    softcap=50.0, sliding_window=4096, pattern=("l", "g")),
+    act="gelu",
+    source="arXiv:2408.00118 (Gemma2-2B: 26L d=2304 8H GQA kv=4 d_ff=9216 "
+           "vocab=256000, alternating SWA+global, attn softcap 50)",
+)
+
+
+def reduced():
+    from repro.configs.registry import SMOKE_RETRO
+    return CONFIG.replace(
+        n_layers=2, d_model=128, d_ff=256, vocab=512,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=32, softcap=50.0,
+                        sliding_window=128, pattern=("l", "g")),
+        dtype="float32", retro=SMOKE_RETRO)

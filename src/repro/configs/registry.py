@@ -1,0 +1,103 @@
+"""Architecture registry + input specs for the assigned shape suite."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                RetroConfig)
+
+ARCH_IDS = (
+    "zamba2_1p2b",
+    "kimi_k2_1t_a32b",
+    "gemma3_1b",
+    "gemma2_9b",
+    "minitron_8b",
+    "rwkv6_3b",
+    "llava_next_34b",
+    "whisper_tiny",
+    "gemma2_2b",
+    "mixtral_8x22b",
+)
+
+# CLI aliases matching the assignment sheet
+ALIASES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "gemma3-1b": "gemma3_1b",
+    "gemma2-9b": "gemma2_9b",
+    "minitron-8b": "minitron_8b",
+    "rwkv6-3b": "rwkv6_3b",
+    "llava-next-34b": "llava_next_34b",
+    "whisper-tiny": "whisper_tiny",
+    "gemma2-2b": "gemma2_2b",
+    "mixtral-8x22b": "mixtral_8x22b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def reduced_config(arch: str) -> ModelConfig:
+    arch = ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+# Reduced-scale RetroConfig used by every smoke variant (same structure,
+# test-friendly segment sizes).
+SMOKE_RETRO = RetroConfig(avg_cluster=8, cluster_cap=16, prefill_segment=256,
+                          update_segment=128, sink=4, local=32,
+                          retrieval_frac=0.06, estimation_frac=0.25,
+                          kmeans_iters=3)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, *,
+                token_dtype=jnp.int32):
+    """ShapeDtypeStruct stand-ins for the step's *batch* inputs.
+
+    Modality frontends are stubbed per the assignment: vlm supplies patch
+    embeddings, audio supplies frame embeddings, both at model width.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    act_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), token_dtype),
+                 "targets": sds((B, S), token_dtype)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), token_dtype)}
+    else:  # decode: one new token; the KV/index state carries seq_len context
+        batch = {"token": sds((B,), token_dtype)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["patch_embeds"] = sds((B, cfg.num_patch_tokens, cfg.d_model),
+                                    act_dtype)
+    if cfg.family == "audio" and shape.kind != "decode":
+        batch["frames"] = sds((B, cfg.encoder_frames, cfg.d_model), act_dtype)
+    return batch
+
+
+def materialize_batch(cfg: ModelConfig, shape: InputShape, key=None):
+    """Concrete random batch matching input_specs (for tests/benchmarks)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, spec in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(spec.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, spec.shape, 0, cfg.vocab,
+                                           dtype=spec.dtype)
+        else:
+            out[name] = jax.random.normal(sub, spec.shape, jnp.float32
+                                          ).astype(spec.dtype)
+    return out

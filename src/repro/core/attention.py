@@ -1,0 +1,271 @@
+"""Tripartite wave attention (paper Sec. 4.2) — decode-step attention.
+
+o = merge(o_steady, o_retrieval, o_estimation)
+
+* steady zone: sinks + local window, exact.
+* retrieval zone: top-r clusters by q·centroid, KV blocks gathered, exact.
+* estimation zone: next-e clusters, contribution ã_i·VS_i with
+  ã_i = exp(q·C_i/√d)/Z and Z accumulating s_i·exp(q·C_i/√d) — the Jensen
+  lower bound (Eq. 2–4).
+
+GQA: clusters belong to kv heads; the retrieval decision is shared across a
+kv head's query group (group-max centroid score), estimation stays per-query.
+
+This module is the pure-jnp reference path; ``repro.kernels.wave_attention``
+provides the fused Pallas kernel with identical semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RetroConfig
+from repro.core.wave_index import WaveState
+from repro.core.zones import ZonePlan
+from repro.models.layers import soft_cap
+
+NEG = -1e30
+
+
+class WaveAttnOut(NamedTuple):
+    out: jax.Array           # (B, Hq, hd)
+    retrieved: jax.Array     # (B, Hkv, r) int32 cluster ids (for cache stats)
+
+
+def rank_clusters(q_group: jax.Array, state: WaveState, plan: ZonePlan,
+                  window: Optional[jax.Array] = None,
+                  softcap: Optional[float] = None, cluster_offset=0):
+    """Rank clusters by centroid score.
+
+    q_group: (B, Hkv, G, hd). Returns (cscore (B,Hkv,G,M) f32, idx_re (B,Hkv,r+e)).
+    ``cluster_offset`` is the global index of local cluster 0 (sharded
+    retrieval: each shard holds an M/n slice of the cluster axis).
+    """
+    hd = q_group.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    cs = jnp.einsum("bhgd,bhmd->bhgm", q_group.astype(jnp.float32),
+                    state.centroid) * scale
+    cs = soft_cap(cs, softcap)
+    M = state.centroid.shape[2]
+    valid = jnp.arange(M) + cluster_offset < state.n_clusters
+    if window is not None:
+        q_pos = state.length - 1
+        valid = valid & (state.max_pos > q_pos - window)
+    else:
+        valid = jnp.broadcast_to(valid, state.max_pos.shape)
+    cs = jnp.where(valid[:, :, None, :], cs, NEG)
+    group_score = jnp.max(cs, axis=2)                     # (B, Hkv, M)
+    _, idx_re = jax.lax.top_k(group_score, plan.r + plan.e)
+    return cs, idx_re
+
+
+def _gather_clusters(state: WaveState, idx: jax.Array):
+    """Gather cluster blocks. idx: (B, Hkv, r) -> stores (B, Hkv, r, cap, hd)."""
+    def take(a):
+        return jnp.take_along_axis(
+            a, idx.reshape(idx.shape + (1,) * (a.ndim - 3)), axis=2)
+    return (take(state.k_store), take(state.v_store), take(state.pos_store))
+
+
+def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
+                          plan: ZonePlan, *, window: Optional[jax.Array] = None,
+                          softcap: Optional[float] = None,
+                          use_estimation: bool = True,
+                          overflow_correction: bool = True,
+                          impl: str = "jnp", cluster_offset=0,
+                          include_steady=True,
+                          return_parts: bool = False) -> WaveAttnOut:
+    """One decode step of tripartite attention.
+
+    q: (B, Hq, hd) — query at position state.length - 1 (the current token's
+    K/V must already be appended to the local buffer).
+
+    Sharded-retrieval hooks (core.distributed): ``cluster_offset`` maps local
+    cluster ids to global for validity; ``include_steady`` (may be traced)
+    gates the steady zone so exactly one shard contributes it;
+    ``return_parts`` yields the unnormalized (num, den, m, idx_r) for a
+    cross-shard LSE merge.
+    """
+    B, Hq, hd = q.shape
+    Hkv = state.k_store.shape[1]
+    G = Hq // Hkv
+    cap = retro.cluster_cap
+    scale = 1.0 / math.sqrt(hd)
+    q_pos = state.length - 1
+    qg = q.reshape(B, Hkv, G, hd)
+
+    cs, idx_re = rank_clusters(qg, state, plan, window, softcap,
+                               cluster_offset)
+    idx_r, idx_e = idx_re[:, :, :plan.r], idx_re[:, :, plan.r:]
+
+    # ---- execution buffer: steady zone + retrieved blocks ------------------
+    kb, vb, pb = _gather_clusters(state, idx_r)            # (B,H,r,cap,hd)
+    k_ret = kb.reshape(B, Hkv, plan.r * cap, hd)
+    v_ret = vb.reshape(B, Hkv, plan.r * cap, hd)
+    p_ret = pb.reshape(B, Hkv, plan.r * cap)
+
+    sink_pos = jnp.broadcast_to(jnp.arange(retro.sink, dtype=jnp.int32),
+                                (B, Hkv, retro.sink))
+    lbuf = state.local_k.shape[2]
+    l0 = state.length - state.local_len                    # abs pos of buffer[0]
+    local_pos = l0 + jnp.arange(lbuf, dtype=jnp.int32)
+    local_pos = jnp.where(jnp.arange(lbuf) < state.local_len, local_pos, -1)
+    local_pos = jnp.broadcast_to(local_pos, (B, Hkv, lbuf))
+
+    k_exec = jnp.concatenate([state.sink_k, state.local_k, k_ret], axis=2)
+    v_exec = jnp.concatenate([state.sink_v, state.local_v, v_ret], axis=2)
+    p_exec = jnp.concatenate([sink_pos, local_pos, p_ret], axis=2)
+
+    # ---- validity mask over the execution buffer ---------------------------
+    ok = (p_exec >= 0) & (p_exec <= q_pos)
+    if window is not None:
+        ok = ok & (p_exec > q_pos - window)
+    if include_steady is not True:                 # traced gate (sharding)
+        n_steady = retro.sink + lbuf
+        is_steady = jnp.arange(p_exec.shape[2]) < n_steady
+        ok = ok & (jnp.asarray(include_steady) | ~is_steady)
+
+    # ---- estimation zone ----------------------------------------------------
+    if use_estimation and plan.e > 0:
+        cs_e = jnp.take_along_axis(cs, idx_e[:, :, None, :], axis=3)   # (B,H,G,e)
+        sz_e = jnp.take_along_axis(state.size, idx_e, axis=2)          # (B,H,e)
+        vs_e = jnp.take_along_axis(
+            state.vsum, idx_e[..., None], axis=2)                      # (B,H,e,hd)
+        log_sz = jnp.log(jnp.maximum(sz_e.astype(jnp.float32), 1.0))
+        est_logit = cs_e + log_sz[:, :, None, :]                       # s_i·exp(cs)
+        est_valid = sz_e > 0
+        est_logit = jnp.where(est_valid[:, :, None, :], est_logit, NEG)
+    else:
+        est_logit = jnp.full((B, Hkv, G, 1), NEG, jnp.float32)
+        cs_e = est_logit
+        vs_e = jnp.zeros((B, Hkv, 1, hd), jnp.float32)
+        sz_e = jnp.zeros((B, Hkv, 1), jnp.int32)
+
+    # overflow correction: tokens dropped from retrieved stores (size > cap)
+    # re-enter through their cluster's estimate, scaled by the dropped fraction.
+    if overflow_correction and use_estimation:
+        cs_r = jnp.take_along_axis(cs, idx_r[:, :, None, :], axis=3)   # (B,H,G,r)
+        sz_r = jnp.take_along_axis(state.size, idx_r, axis=2)
+        st_r = jnp.take_along_axis(state.stored, idx_r, axis=2)
+        vs_r = jnp.take_along_axis(state.vsum, idx_r[..., None], axis=2)
+        over = jnp.maximum(sz_r - st_r, 0).astype(jnp.float32)         # (B,H,r)
+        frac = over / jnp.maximum(sz_r.astype(jnp.float32), 1.0)
+        log_over = jnp.where(over > 0, jnp.log(jnp.maximum(over, 1.0)), NEG)
+        ov_logit = cs_r + log_over[:, :, None, :]
+        est_logit = jnp.concatenate([est_logit, ov_logit], axis=3)
+        cs_e = jnp.concatenate([cs_e, cs_r], axis=3)
+        vs_e = jnp.concatenate([vs_e, vs_r * frac[..., None]], axis=2)
+        sz_e = jnp.concatenate([sz_e, over.astype(jnp.int32)], axis=2)
+
+    if return_parts:
+        num, den, m = tripartite_merge_parts_jnp(
+            qg, k_exec, v_exec, ok, est_logit, cs_e, vs_e, softcap=softcap)
+        return num, den, m, idx_r
+    out = tripartite_merge(qg, k_exec, v_exec, ok, est_logit, cs_e, vs_e,
+                           softcap=softcap, impl=impl)
+    return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx_r)
+
+
+def tripartite_merge_parts_jnp(qg, k_exec, v_exec, valid, est_logit, cs_e,
+                               vs_e, *, softcap: Optional[float] = None):
+    """Unnormalized fused merge: returns (num (B,H,G,hd), den (B,H,G),
+    m (B,H,G)) with num/den scaled by exp(-m). Distribution-friendly: partial
+    results from shards LSE-combine via pmax/psum (core.distributed)."""
+    hd = qg.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    # keep K/V operands in their storage dtype (bf16) with f32 ACCUMULATION:
+    # an explicit .astype(f32) gets hoisted through the gather by XLA and
+    # converts the ENTIRE cluster store every step (§Perf iteration, ~2x the
+    # store in temps + bytes). MXU takes bf16 natively; accumulate in f32.
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(k_exec.dtype), k_exec,
+                   preferred_element_type=jnp.float32) * scale
+    s = soft_cap(s, softcap)
+    s = jnp.where(valid[:, :, None, :], s, NEG)
+
+    m = jnp.maximum(jnp.max(s, axis=-1), jnp.max(est_logit, axis=-1))  # (B,H,G)
+    m = jnp.maximum(m, -1e20)
+    p = jnp.exp(s - m[..., None])
+    den = jnp.sum(p, axis=-1)
+    num = jnp.einsum("bhgt,bhtd->bhgd", p.astype(v_exec.dtype), v_exec,
+                     preferred_element_type=jnp.float32)
+
+    live = est_logit > NEG / 2
+    w_den = jnp.where(live, jnp.exp(est_logit - m[..., None]), 0.0)    # s_i·e^{cs}
+    w_num = jnp.where(live, jnp.exp(cs_e - m[..., None]), 0.0)         # e^{cs}
+    den = den + jnp.sum(w_den, axis=-1)
+    num = num + jnp.einsum("bhge,bhed->bhgd", w_num, vs_e.astype(jnp.float32))
+    return num, den, m
+
+
+def tripartite_merge_jnp(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
+                         softcap: Optional[float] = None) -> jax.Array:
+    """Reference fused exact-attention + estimation merge.
+
+    qg: (B,H,G,hd); k_exec/v_exec: (B,H,T,hd); valid: (B,H,T) bool;
+    est_logit/cs_e: (B,H,G,E) f32 (NEG-masked); vs_e: (B,H,E,hd) f32.
+    Returns (B,H,G,hd) f32. The Pallas kernel in
+    ``repro.kernels.wave_attention`` implements identical semantics.
+    """
+    num, den, _ = tripartite_merge_parts_jnp(
+        qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, softcap=softcap)
+    return num / jnp.maximum(den, 1e-30)[..., None]
+
+
+def tripartite_merge(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
+                     softcap: Optional[float] = None, impl: str = "jnp"):
+    if impl == "jnp":
+        return tripartite_merge_jnp(qg, k_exec, v_exec, valid, est_logit,
+                                    cs_e, vs_e, softcap=softcap)
+    from repro.kernels.wave_attention import ops as wa_ops
+    return wa_ops.wave_attention_merge(qg, k_exec, v_exec, valid, est_logit,
+                                       cs_e, vs_e, softcap=softcap,
+                                       interpret=wa_ops.on_cpu())
+
+
+# ---------------------------------------------------------------------------
+# Dense full-attention decode baseline (paper's "full attention" comparator)
+# ---------------------------------------------------------------------------
+
+class DenseCache(NamedTuple):
+    k: jax.Array            # (B, H, S_max, hd)
+    v: jax.Array            # (B, H, S_max, hd)
+    length: jax.Array       # () int32
+
+
+def init_dense_cache(B, H, S_max, hd, dtype=jnp.bfloat16) -> DenseCache:
+    return DenseCache(jnp.zeros((B, H, S_max, hd), dtype),
+                      jnp.zeros((B, H, S_max, hd), dtype),
+                      jnp.zeros((), jnp.int32))
+
+
+def dense_cache_append(cache: DenseCache, k_new, v_new) -> DenseCache:
+    idx = cache.length
+    return DenseCache(
+        jax.lax.dynamic_update_slice(
+            cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, idx, 0)),
+        jax.lax.dynamic_update_slice(
+            cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, idx, 0)),
+        cache.length + 1)
+
+
+def full_attention_decode(q, cache: DenseCache, *, window=None, softcap=None):
+    """q: (B, Hq, hd) vs the dense cache. Exact softmax over valid positions."""
+    B, Hq, hd = q.shape
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                   cache.k.astype(jnp.float32)) * scale
+    s = soft_cap(s, softcap)
+    pos = jnp.arange(cache.k.shape[2])
+    ok = pos < cache.length
+    if window is not None:
+        ok = ok & (pos > cache.length - 1 - window)
+    s = jnp.where(ok[None, None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)

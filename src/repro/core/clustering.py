@@ -1,0 +1,177 @@
+"""Segmented spherical k-means (paper Sec. 4.2, "segmented clustering").
+
+The input sequence is split into fixed-size segments; spherical k-means runs
+*within* each segment independently (RoPE-induced spatial locality makes
+global clustering unnecessary — paper Fig. 19b). A mean-centering transform
+(All-but-the-top / MagicPIG-inspired) is applied before assignment so that
+inner-product clustering tracks attention-score ordering; centroid statistics
+(mean key, value sum, size) are computed over the *raw* keys/values so the
+Jensen bound of the estimation zone holds exactly.
+
+All functions are single-(batch, head) and vmapped by callers.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClusterResult(NamedTuple):
+    """Fixed-capacity cluster stores for one segment.
+
+    k_store/v_store: (k, cap, hd)   padded member keys/values
+    pos_store:       (k, cap) int32 member positions, -1 where padded
+    centroid:        (k, hd) f32    mean of ALL assigned raw keys
+    vsum:            (k, hd) f32    sum of ALL assigned values
+    size:            (k,) int32     total assigned count (incl. overflow)
+    stored:          (k,) int32     members physically stored (<= cap)
+    max_pos:         (k,) int32     max member position (sliding-window masks)
+    """
+    k_store: jax.Array
+    v_store: jax.Array
+    pos_store: jax.Array
+    centroid: jax.Array
+    vsum: jax.Array
+    size: jax.Array
+    stored: jax.Array
+    max_pos: jax.Array
+
+
+def _normalize(x, eps=1e-8):
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def spherical_kmeans(keys: jax.Array, k: int, iters: int, centering: bool = True):
+    """keys: (n, hd) -> (assign (n,) int32, centroids_raw (k, hd) f32).
+
+    Spherical: centroids are L2-normalized before the assignment step;
+    similarity is the inner product (matches q.K attention scoring).
+    Returned centroids are raw (un-normalized) means of assigned keys.
+    """
+    n, hd = keys.shape
+    kf = keys.astype(jnp.float32)
+    mu = jnp.mean(kf, axis=0, keepdims=True)
+    x = kf - mu if centering else kf
+
+    # deterministic strided init: every (n//k)-th (centered) key
+    stride = max(1, n // k)
+    init_idx = jnp.minimum(jnp.arange(k) * stride, n - 1)
+    cent = x[init_idx]
+
+    onehot_dtype = jnp.float32
+
+    def step(cent, _):
+        cn = _normalize(cent)
+        sim = x @ cn.T                                    # (n, k)
+        assign = jnp.argmax(sim, axis=-1)
+        oh = jax.nn.one_hot(assign, k, dtype=onehot_dtype)  # (n, k)
+        counts = jnp.sum(oh, axis=0)                      # (k,)
+        sums = oh.T @ x                                   # (k, hd)
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    sim = x @ _normalize(cent).T
+    assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+
+    # raw-space centroids for the estimation-zone Jensen bound
+    oh = jax.nn.one_hot(assign, k, dtype=onehot_dtype)
+    counts = jnp.sum(oh, axis=0)
+    cent_raw = (oh.T @ kf) / jnp.maximum(counts[:, None], 1.0)
+    return assign, cent_raw
+
+
+def build_cluster_stores(keys, values, positions, assign, k: int, cap: int) -> ClusterResult:
+    """Scatter tokens of one segment into fixed-capacity cluster stores.
+
+    keys/values: (n, hd); positions: (n,) int32; assign: (n,) int32 in [0, k).
+    Tokens beyond a cluster's capacity are dropped from the store but still
+    counted in centroid/vsum/size — the estimation zone covers them (DESIGN §2).
+    """
+    n, hd = keys.shape
+    kf = keys.astype(jnp.float32)
+    vf = values.astype(jnp.float32)
+
+    oh = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    size = jnp.sum(oh, axis=0).astype(jnp.int32)
+    centroid = (oh.T @ kf) / jnp.maximum(size[:, None].astype(jnp.float32), 1.0)
+    vsum = oh.T @ vf
+    max_pos = jnp.max(jnp.where(oh.T > 0, positions[None, :], -1), axis=-1).astype(jnp.int32)
+
+    # rank of each token within its cluster (stable grouping via sort)
+    order = jnp.argsort(assign, stable=True)              # token ids grouped by cluster
+    sa = assign[order]
+    starts = jnp.searchsorted(sa, jnp.arange(k), side="left")
+    rank = jnp.arange(n) - starts[sa]                     # 0-based rank in cluster
+
+    k_store = jnp.zeros((k, cap, hd), dtype=keys.dtype)
+    v_store = jnp.zeros((k, cap, hd), dtype=values.dtype)
+    pos_store = jnp.full((k, cap), -1, dtype=jnp.int32)
+    # mode="drop" discards rank >= cap writes (overflow)
+    k_store = k_store.at[sa, rank].set(keys[order], mode="drop")
+    v_store = v_store.at[sa, rank].set(values[order], mode="drop")
+    pos_store = pos_store.at[sa, rank].set(positions[order].astype(jnp.int32), mode="drop")
+    stored = jnp.minimum(size, cap)
+    return ClusterResult(k_store, v_store, pos_store, centroid, vsum, size, stored, max_pos)
+
+
+def cluster_segment(keys, values, positions, avg_cluster: int, cap: int,
+                    iters: int, centering: bool) -> ClusterResult:
+    """Cluster one segment: (n, hd) keys/values -> k = n // avg_cluster clusters."""
+    n = keys.shape[0]
+    k = max(1, n // avg_cluster)
+    assign, _ = spherical_kmeans(keys, k, iters, centering)
+    return build_cluster_stores(keys, values, positions, assign, k, cap)
+
+
+def segmented_cluster(keys, values, positions, segment: int, avg_cluster: int,
+                      cap: int, iters: int, centering: bool,
+                      serial: bool = False) -> ClusterResult:
+    """Cluster a (n, hd) sequence segment-by-segment; n must divide by segment.
+
+    Returns a ClusterResult whose leading dim is total clusters n//avg_cluster,
+    ordered segment-major (cluster ids are globally unique).
+
+    ``serial=True`` runs segments through ``lax.map`` instead of ``vmap`` —
+    identical results, but the k-means working set (similarity matrices,
+    one-hots) is materialized for ONE segment at a time instead of all
+    segments at once (§Perf: prefill peak-memory iteration).
+    """
+    n, hd = keys.shape
+    assert n % segment == 0, (n, segment)
+    n_seg = n // segment
+    ks = keys.reshape(n_seg, segment, hd)
+    vs = values.reshape(n_seg, segment, hd)
+    ps = positions.reshape(n_seg, segment)
+    fn = partial(cluster_segment, avg_cluster=avg_cluster, cap=cap,
+                 iters=iters, centering=centering)
+    if serial:
+        res = jax.lax.map(lambda args: fn(*args), (ks, vs, ps))
+    else:
+        res = jax.vmap(fn)(ks, vs, ps)                    # (n_seg, k_per_seg, ...)
+    flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), res)
+    return ClusterResult(*flat)
+
+
+def clustering_recall(q, keys, result: ClusterResult, r: int, topk: int = 100):
+    """Recall@topk of the retrieval zone vs exact top attention scores.
+
+    q: (hd,), keys: (n, hd). Metric used for the paper's Fig. 19b analysis.
+    """
+    scores = keys.astype(jnp.float32) @ q.astype(jnp.float32)
+    true_top = jax.lax.top_k(scores, topk)[1]
+    csc = result.centroid @ q.astype(jnp.float32)
+    top_c = jax.lax.top_k(csc, r)[1]
+    sel = jnp.zeros(scores.shape[0], dtype=bool)
+    pos = result.pos_store[top_c].reshape(-1)             # retrieved positions
+    pos0 = positions_to_local(pos, scores.shape[0])
+    sel = sel.at[pos0].set(True, mode="drop")
+    return jnp.mean(sel[true_top].astype(jnp.float32))
+
+
+def positions_to_local(pos, n):
+    """Map absolute positions to [0, n) assuming the segmenting started at 0."""
+    return jnp.where(pos >= 0, pos, n)                    # -1 pads -> dropped

@@ -1,0 +1,105 @@
+"""Block-sparse prefill attention (paper Sec. 5.2 "Compatibility with Sparse
+Prefilling", Fig. 12 — XAttention / MInference flavored).
+
+RetroInfer optimizes decoding; prefill remains quadratic. The paper shows it
+composes with sparse-prefill methods at ~1.5% accuracy cost. This module
+implements a block top-k sparse prefill: keys are summarized per block (mean
+key), each query block selects its top-k key blocks by summary score (sinks +
+the local diagonal band are always kept), and exact attention runs only over
+the selected blocks. The wave-index build is unaffected — it consumes the
+same K/V the sparse pass produces.
+
+Pure jnp with static shapes: (T/bs query blocks) x (sel selected key blocks).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _repeat_kv, soft_cap
+
+NEG = -1e30
+
+
+def block_sparse_attention(q, k, v, *, block: int = 128,
+                           topk_blocks: int = 16, sink_blocks: int = 1,
+                           local_blocks: int = 2,
+                           window: Optional[float] = None,
+                           softcap: Optional[float] = None):
+    """Causal block-sparse attention.
+
+    q: (B, T, Hq, hd); k, v: (B, T, Hkv, hd); T % block == 0.
+    Selection is per (kv-head, query-block): top ``topk_blocks`` key blocks by
+    q-block-mean x k-block-mean score, plus forced sink/local blocks.
+    Returns (B, T, Hq, hd).
+    """
+    B, T, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    n_rep = Hq // Hkv
+    assert T % block == 0, (T, block)
+    nb = T // block
+    sel = min(nb, topk_blocks + sink_blocks + local_blocks)
+    scale = 1.0 / math.sqrt(hd)
+
+    kr = _repeat_kv(k, n_rep)
+    vr = _repeat_kv(v, n_rep)
+
+    # block summaries (f32): mean query / mean key per block
+    qb = q.reshape(B, nb, block, Hq, hd).mean(axis=2).astype(jnp.float32)
+    kb = k.reshape(B, nb, block, Hkv, hd).mean(axis=2).astype(jnp.float32)
+    s_blk = jnp.einsum("bqhd,bkgd->bhqk",
+                       qb.reshape(B, nb, Hkv, n_rep, hd).mean(axis=3),
+                       kb) * scale                        # (B, Hkv, nb, nb)
+    causal = jnp.tril(jnp.ones((nb, nb), bool))
+    s_blk = jnp.where(causal[None, None], s_blk, NEG)
+    # force sinks + local diagonal band
+    qi = jnp.arange(nb)[:, None]
+    ki = jnp.arange(nb)[None, :]
+    forced = (ki < sink_blocks) | ((ki <= qi) & (ki > qi - local_blocks))
+    s_blk = jnp.where(forced[None, None], jnp.inf, s_blk)
+    _, blk_idx = jax.lax.top_k(s_blk, sel)                # (B, Hkv, nb, sel)
+
+    # gather selected key/value blocks per (B, Hkv-group, q-block)
+    k4 = kr.reshape(B, nb, block, Hq, hd)
+    v4 = vr.reshape(B, nb, block, Hq, hd)
+    blk_idx_h = jnp.repeat(blk_idx, n_rep, axis=1)        # (B, Hq, nb, sel)
+
+    def gather_blocks(x4, idx):
+        # x4: (B, nb, block, Hq, hd); idx: (B, Hq, nb, sel)
+        xh = jnp.moveaxis(x4, 3, 1)                       # (B, Hq, nb, blk, hd)
+        out = jnp.take_along_axis(
+            xh[:, :, None], idx[..., None, None], axis=3) # (B,Hq,nb,sel,blk,hd)
+        return out
+
+    ks = gather_blocks(k4, blk_idx_h)
+    vs = gather_blocks(v4, blk_idx_h)
+
+    qf = q.reshape(B, nb, block, Hq, hd)
+    qf = jnp.moveaxis(qf, 3, 1).astype(jnp.float32)       # (B,Hq,nb,blk,hd)
+    s = jnp.einsum("bhnqd,bhnskd->bhnqsk", qf,
+                   ks.astype(jnp.float32)) * scale        # (...,q,sel,blk)
+    s = soft_cap(s, softcap)
+
+    # causal + window masking at token granularity
+    q_pos = (jnp.arange(nb)[:, None] * block
+             + jnp.arange(block)[None, :])                # (nb, blk)
+    k_pos = (blk_idx_h[..., None] * block
+             + jnp.arange(block))                         # (B,Hq,nb,sel,blk)
+    ok = k_pos[:, :, :, None] <= q_pos[None, None, :, :, None, None]
+    if window is not None:
+        ok = ok & (k_pos[:, :, :, None]
+                   > q_pos[None, None, :, :, None, None] - window)
+    s = jnp.where(ok, s, NEG)
+
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    m = jnp.maximum(m, -1e20)
+    p = jnp.exp(s - m)
+    p = jnp.where(ok, p, 0.0)
+    den = jnp.sum(p, axis=(-2, -1))
+    num = jnp.einsum("bhnqsk,bhnskd->bhnqd", p, vs.astype(jnp.float32))
+    out = num / jnp.maximum(den, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 1, 3).reshape(B, T, Hq, hd)   # (B,nb,blk,Hq,hd)->
+    return out.astype(q.dtype)

@@ -1,0 +1,176 @@
+"""Wave buffer — the accuracy-agnostic buffer manager (paper Sec. 4.3).
+
+On a real TPU deployment the KV store lives in sharded HBM and the "cache" is
+HBM itself (DESIGN §2). This module implements the paper's *host-offload*
+configuration — KV blocks in host memory, a fixed-size device block cache,
+an execution buffer assembled from {steady zone, cache hits, misses} — used by
+the single-host serving driver and the cache benchmarks. Mirroring the paper:
+
+* cluster -> block indirection via a mapping table (logical clusters may span
+  multiple fixed-size physical blocks),
+* synchronous cache *access* on the critical path, asynchronous (deferred,
+  vectorized) cache *update* — LRU metadata is maintained off the hot path,
+* hit/miss/transfer accounting to reproduce Fig. 16-style analyses.
+
+The control plane is NumPy (the paper runs it on CPU threads); the data plane
+arrays live wherever the caller puts them (device or host).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class BufferStats:
+    lookups: int = 0
+    hits: int = 0
+    misses: int = 0
+    bytes_from_cache: int = 0
+    bytes_over_link: int = 0        # host->device traffic (the "PCIe" analogue)
+    bytes_steady: int = 0
+    updates_deferred: int = 0
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hits / max(1, self.lookups)
+
+
+class ClusterMappingTable:
+    """Logical cluster -> physical block address translation (paper Fig. 9).
+
+    Each cluster occupies ``blocks_per_cluster`` consecutive physical blocks in
+    host memory; the table tracks, per cluster, the device-cache slot (or -1).
+    Implemented as flat int arrays for O(1) vectorized lookup.
+    """
+
+    def __init__(self, n_clusters: int, blocks_per_cluster: int):
+        self.blocks_per_cluster = blocks_per_cluster
+        self.host_block = np.arange(n_clusters, dtype=np.int64) * blocks_per_cluster
+        self.cache_slot = np.full(n_clusters, -1, dtype=np.int64)
+
+    def lookup(self, cluster_ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """-> (cache_slot per cluster (-1 = miss), host_block per cluster)."""
+        return self.cache_slot[cluster_ids], self.host_block[cluster_ids]
+
+
+class WaveBuffer:
+    """Device block cache + execution-buffer assembly with deferred LRU.
+
+    ``kv_host``: (n_clusters, bytes_per_cluster) conceptual host store — here
+    an ndarray of cluster payloads (keys+values flattened). The device cache
+    holds ``cache_clusters`` payload rows.
+    """
+
+    def __init__(self, kv_host: np.ndarray, cache_clusters: int,
+                 blocks_per_cluster: int = 1, policy: str = "lru"):
+        assert policy in ("lru", "fifo", "clock")
+        self.kv_host = kv_host
+        n = kv_host.shape[0]
+        self.table = ClusterMappingTable(n, blocks_per_cluster)
+        self.cache = np.zeros((cache_clusters,) + kv_host.shape[1:],
+                              dtype=kv_host.dtype)
+        self.cache_owner = np.full(cache_clusters, -1, dtype=np.int64)
+        self.policy = policy
+        self.clock_hand = 0
+        self.ref_bit = np.zeros(cache_clusters, dtype=bool)
+        self.stamp = np.zeros(cache_clusters, dtype=np.int64)   # LRU timestamps
+        self.tick = 0
+        self.stats = BufferStats()
+        self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
+        self.bytes_per_cluster = int(kv_host[0].nbytes) if n else 0
+
+    # ------------------------------------------------------------------ access
+    def assemble(self, cluster_ids: np.ndarray,
+                 steady_payload: Optional[np.ndarray] = None) -> np.ndarray:
+        """Assemble the execution buffer for one decode step (synchronous).
+
+        Returns the concatenated payloads [steady | retrieved clusters] and
+        records hit/miss traffic. Cache *insertion* is deferred (async update).
+        """
+        cluster_ids = np.asarray(cluster_ids, dtype=np.int64)
+        slot, _ = self.table.lookup(cluster_ids)
+        hit = slot >= 0
+        self.tick += 1
+        self.stats.lookups += len(cluster_ids)
+        self.stats.hits += int(hit.sum())
+        self.stats.misses += int((~hit).sum())
+        self.stats.bytes_from_cache += int(hit.sum()) * self.bytes_per_cluster
+        self.stats.bytes_over_link += int((~hit).sum()) * self.bytes_per_cluster
+
+        payload = np.empty((len(cluster_ids),) + self.kv_host.shape[1:],
+                           dtype=self.kv_host.dtype)
+        if hit.any():
+            payload[hit] = self.cache[slot[hit]]
+            self.stamp[slot[hit]] = self.tick            # touch (cheap, vector)
+            self.ref_bit[slot[hit]] = True
+        if (~hit).any():
+            payload[~hit] = self.kv_host[cluster_ids[~hit]]
+
+        # defer admission of misses (paper: async cache update by CPU pool)
+        if (~hit).any():
+            self._pending.append((cluster_ids[~hit], payload[~hit]))
+            self.stats.updates_deferred += 1
+
+        if steady_payload is not None:
+            self.stats.bytes_steady += int(steady_payload.nbytes)
+            return np.concatenate([steady_payload, payload], axis=0)
+        return payload
+
+    # ------------------------------------------------------------------ update
+    def apply_updates(self):
+        """Apply deferred admissions (runs off the critical path)."""
+        for ids, payload in self._pending:
+            self._admit(ids, payload)
+        self._pending.clear()
+
+    def _victims(self, n: int) -> np.ndarray:
+        if self.policy == "lru":
+            return np.argsort(self.stamp)[:n]
+        if self.policy == "fifo":
+            v = (self.clock_hand + np.arange(n)) % len(self.cache_owner)
+            self.clock_hand = int((self.clock_hand + n) % len(self.cache_owner))
+            return v
+        # clock (second chance) — victims must be unique within a batch
+        victims: list = []
+        chosen = set()
+        guard = 0
+        size = len(self.cache_owner)
+        while len(victims) < n and guard < 4 * size:
+            h = self.clock_hand
+            self.clock_hand = (h + 1) % size
+            guard += 1
+            if h in chosen:
+                continue
+            if self.ref_bit[h]:
+                self.ref_bit[h] = False
+            else:
+                victims.append(h)
+                chosen.add(h)
+        for h in range(size):                      # exhaustive fallback
+            if len(victims) >= n:
+                break
+            if h not in chosen:
+                victims.append(h)
+                chosen.add(h)
+        return np.asarray(victims, dtype=np.int64)
+
+    def _admit(self, cluster_ids: np.ndarray, payload: np.ndarray):
+        # dedupe (a cluster may be requested twice before updates apply)
+        cluster_ids, uniq = np.unique(cluster_ids, return_index=True)
+        payload = payload[uniq]
+        fresh = self.table.cache_slot[cluster_ids] < 0
+        cluster_ids, payload = cluster_ids[fresh], payload[fresh]
+        if len(cluster_ids) == 0:
+            return
+        victims = self._victims(len(cluster_ids))
+        evicted = self.cache_owner[victims]
+        live = evicted >= 0
+        self.table.cache_slot[evicted[live]] = -1
+        self.cache[victims] = payload
+        self.cache_owner[victims] = cluster_ids
+        self.table.cache_slot[cluster_ids] = victims
+        self.stamp[victims] = self.tick
+        self.ref_bit[victims] = True

@@ -1,0 +1,210 @@
+"""Wave index: attention-aware cluster index over the KV cache (paper Sec. 4.2).
+
+Per attention layer the index state holds, for every (batch, kv_head):
+
+* fixed-capacity cluster stores (keys/values/positions) in "CPU memory" —
+  on TPU: sharded HBM (see DESIGN §2),
+* the meta index (centroid, value-sum, size) — small, fast-memory resident,
+* the steady zone: attention sinks + a local-window ring buffer that doubles
+  as the staging area for decode-time segmented clustering (flushed into new
+  clusters every ``update_segment`` generated tokens).
+
+All shapes are static; the active cluster count is a traced scalar.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RetroConfig
+from repro.core.clustering import (ClusterResult, cluster_segment,
+                                   segmented_cluster)
+
+
+class WaveState(NamedTuple):
+    """Per-layer wave-index state. Leading dims: (B, Hkv, ...)."""
+    k_store: jax.Array      # (B, H, M, cap, hd)
+    v_store: jax.Array      # (B, H, M, cap, hd)
+    pos_store: jax.Array    # (B, H, M, cap) int32, -1 = pad
+    centroid: jax.Array     # (B, H, M, hd) f32 — meta index
+    vsum: jax.Array         # (B, H, M, hd) f32 — meta index
+    size: jax.Array         # (B, H, M) int32  — meta index
+    stored: jax.Array       # (B, H, M) int32
+    max_pos: jax.Array      # (B, H, M) int32
+    n_clusters: jax.Array   # () int32 — active clusters
+    sink_k: jax.Array       # (B, H, sink, hd)
+    sink_v: jax.Array       # (B, H, sink, hd)
+    local_k: jax.Array      # (B, H, Lbuf, hd) ring/staging buffer
+    local_v: jax.Array      # (B, H, Lbuf, hd)
+    local_len: jax.Array    # () int32 — valid tail of the local buffer
+    length: jax.Array       # () int32 — total tokens seen
+
+
+def local_buffer_size(retro: RetroConfig) -> int:
+    return retro.local + retro.update_segment
+
+
+def prefill_layout(seq_len: int, retro: RetroConfig) -> Tuple[int, int, int]:
+    """(n_full_segments, tail_len, n_prefill_clusters) for a prompt of seq_len.
+
+    Clustered region = [sink, seq_len - local); full segments of
+    ``prefill_segment`` plus one partial tail segment.
+    """
+    region = seq_len - retro.sink - retro.local
+    n_full = region // retro.prefill_segment
+    tail = region - n_full * retro.prefill_segment
+    m = n_full * (retro.prefill_segment // retro.avg_cluster)
+    if tail > 0:
+        m += max(1, tail // retro.avg_cluster)
+    return n_full, tail, m
+
+
+def max_clusters(seq_len: int, retro: RetroConfig, gen_headroom: int = 4096,
+                 pad_multiple: int = 256) -> int:
+    """Static cluster-store size: prefill clusters + decode-flush headroom,
+    rounded up so the cluster axis divides the production 'model' mesh axis
+    (padded clusters sit beyond ``n_clusters`` and are masked everywhere)."""
+    _, _, m = prefill_layout(seq_len, retro)
+    m = m + (gen_headroom // retro.update_segment) * (
+        retro.update_segment // retro.avg_cluster)
+    return ((m + pad_multiple - 1) // pad_multiple) * pad_multiple
+
+
+def init_wave_state(B: int, H: int, hd: int, M: int, retro: RetroConfig,
+                    dtype=jnp.bfloat16) -> WaveState:
+    cap, sink, lbuf = retro.cluster_cap, retro.sink, local_buffer_size(retro)
+    z = jnp.zeros
+    return WaveState(
+        k_store=z((B, H, M, cap, hd), dtype), v_store=z((B, H, M, cap, hd), dtype),
+        pos_store=jnp.full((B, H, M, cap), -1, jnp.int32),
+        centroid=z((B, H, M, hd), jnp.float32), vsum=z((B, H, M, hd), jnp.float32),
+        size=z((B, H, M), jnp.int32), stored=z((B, H, M), jnp.int32),
+        max_pos=jnp.full((B, H, M), -1, jnp.int32),
+        n_clusters=jnp.zeros((), jnp.int32),
+        sink_k=z((B, H, sink, hd), dtype), sink_v=z((B, H, sink, hd), dtype),
+        local_k=z((B, H, lbuf, hd), dtype), local_v=z((B, H, lbuf, hd), dtype),
+        local_len=jnp.zeros((), jnp.int32), length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _write_clusters(state: WaveState, res: ClusterResult, offset) -> WaveState:
+    """Write a block of freshly clustered segments at cluster ``offset``.
+
+    res leaves have leading (B, H, k_new, ...); offset may be traced.
+    """
+    def upd(store, new):
+        start = (0, 0, offset) + (0,) * (new.ndim - 3)
+        return jax.lax.dynamic_update_slice(store, new.astype(store.dtype), start)
+
+    return state._replace(
+        k_store=upd(state.k_store, res.k_store),
+        v_store=upd(state.v_store, res.v_store),
+        pos_store=upd(state.pos_store, res.pos_store),
+        centroid=upd(state.centroid, res.centroid),
+        vsum=upd(state.vsum, res.vsum),
+        size=upd(state.size, res.size),
+        stored=upd(state.stored, res.stored),
+        max_pos=upd(state.max_pos, res.max_pos),
+        n_clusters=state.n_clusters + res.size.shape[2],
+    )
+
+
+def prefill_build(k: jax.Array, v: jax.Array, retro: RetroConfig, M: int,
+                  dtype=None) -> WaveState:
+    """Build the wave index from prefill K/V.
+
+    k, v: (B, S, H, hd) post-RoPE. Returns a WaveState with the prompt's
+    sink/local/steady zones populated and all segments clustered.
+    """
+    B, S, H, hd = k.shape
+    dtype = dtype or k.dtype
+    retro_sink, local = retro.sink, retro.local
+    n_full, tail, _ = prefill_layout(S, retro)
+    state = init_wave_state(B, H, hd, M, retro, dtype)
+
+    kbh = jnp.swapaxes(k, 1, 2)                            # (B, H, S, hd)
+    vbh = jnp.swapaxes(v, 1, 2)
+    state = state._replace(
+        sink_k=kbh[:, :, :retro_sink], sink_v=vbh[:, :, :retro_sink],
+        local_k=jax.lax.dynamic_update_slice(
+            state.local_k, kbh[:, :, S - local:], (0, 0, 0, 0)),
+        local_v=jax.lax.dynamic_update_slice(
+            state.local_v, vbh[:, :, S - local:], (0, 0, 0, 0)),
+        local_len=jnp.asarray(local, jnp.int32),
+        length=jnp.asarray(S, jnp.int32),
+    )
+
+    pos = jnp.arange(S, dtype=jnp.int32)
+    seg = retro.prefill_segment
+
+    def bh_full(kk, vv):
+        s0 = retro_sink
+        return segmented_cluster(kk[s0:s0 + n_full * seg], vv[s0:s0 + n_full * seg],
+                                 pos[s0:s0 + n_full * seg], seg, retro.avg_cluster,
+                                 retro.cluster_cap, retro.kmeans_iters, retro.centering,
+                                 serial=retro.serial_prefill_segments)
+
+    if n_full > 0:
+        res = jax.vmap(jax.vmap(bh_full))(kbh, vbh)
+        state = _write_clusters(state, res, 0)
+
+    if tail > 0:
+        t0 = retro_sink + n_full * seg
+
+        def bh_tail(kk, vv):
+            return cluster_segment(kk[t0:t0 + tail], vv[t0:t0 + tail],
+                                   pos[t0:t0 + tail], retro.avg_cluster,
+                                   retro.cluster_cap, retro.kmeans_iters,
+                                   retro.centering)
+
+        res_t = jax.vmap(jax.vmap(bh_tail))(kbh, vbh)
+        state = _write_clusters(state, res_t, state.n_clusters)
+
+    return state
+
+
+def append_token(state: WaveState, k_new: jax.Array, v_new: jax.Array) -> WaveState:
+    """Append one generated token's (B, H, hd) K/V to the local buffer."""
+    idx = state.local_len
+    k_new = k_new[:, :, None, :].astype(state.local_k.dtype)
+    v_new = v_new[:, :, None, :].astype(state.local_v.dtype)
+    return state._replace(
+        local_k=jax.lax.dynamic_update_slice(state.local_k, k_new, (0, 0, idx, 0)),
+        local_v=jax.lax.dynamic_update_slice(state.local_v, v_new, (0, 0, idx, 0)),
+        local_len=state.local_len + 1,
+        length=state.length + 1,
+    )
+
+
+def flush_segment(state: WaveState, retro: RetroConfig) -> WaveState:
+    """Cluster the oldest ``update_segment`` tokens of a full local buffer into
+    new clusters (paper: decode-time index update, every 1K tokens) and slide
+    the remaining ``local`` tokens to the front.
+    """
+    useg, local = retro.update_segment, retro.local
+    lbuf = local_buffer_size(retro)
+    B, H, _, hd = state.local_k.shape
+    start = state.length - state.local_len                 # abs pos of buffer[0]
+    pos = (start + jnp.arange(useg, dtype=jnp.int32))
+
+    def bh(kk, vv):
+        return cluster_segment(kk[:useg], vv[:useg], pos, retro.avg_cluster,
+                               retro.cluster_cap, retro.kmeans_iters, retro.centering)
+
+    res = jax.vmap(jax.vmap(bh))(state.local_k, state.local_v)
+    state = _write_clusters(state, res, state.n_clusters)
+
+    # slide the local window to the front of the staging buffer
+    rolled_k = jnp.roll(state.local_k, -useg, axis=2)
+    rolled_v = jnp.roll(state.local_v, -useg, axis=2)
+    return state._replace(local_k=rolled_k, local_v=rolled_v,
+                          local_len=state.local_len - useg)
+
+
+def maybe_flush(state: WaveState, retro: RetroConfig) -> WaveState:
+    """Flush inside jit iff the staging buffer is full."""
+    full = state.local_len >= local_buffer_size(retro)
+    return jax.lax.cond(full, lambda s: flush_segment(s, retro), lambda s: s, state)

@@ -1,0 +1,34 @@
+"""Tripartite zone planning (paper Sec. 4.2).
+
+Given a context length and the RetroConfig budgets, compute the static sizes of
+the retrieval zone (r clusters, fetched + exact attention) and estimation zone
+(e clusters, centroid-estimated). The steady zone is fixed (sink + local).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.configs.base import RetroConfig
+from repro.core.wave_index import max_clusters, prefill_layout
+
+
+class ZonePlan(NamedTuple):
+    m_max: int          # static cluster-store size
+    r: int              # retrieval-zone clusters
+    e: int              # estimation-zone clusters
+    sink: int
+    local_buf: int      # staging buffer (local window + update segment)
+
+    @property
+    def exec_tokens(self) -> int:
+        """Execution-buffer token slots (steady + retrieved)."""
+        return self.sink + self.local_buf
+
+
+def plan_zones(seq_len: int, retro: RetroConfig, gen_headroom: int = 4096) -> ZonePlan:
+    _, _, m_prefill = prefill_layout(seq_len, retro)
+    m_max = max_clusters(seq_len, retro, gen_headroom)
+    r = min(retro.r_clusters(seq_len), m_prefill)
+    e = min(retro.e_clusters(seq_len), max(0, m_prefill - r))
+    return ZonePlan(m_max=m_max, r=r, e=e, sink=retro.sink,
+                    local_buf=retro.local + retro.update_segment)

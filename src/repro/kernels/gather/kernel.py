@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: execution-buffer assembly (paper Sec. 4.6 copy kernels).
+
+The paper implements ~1000 LoC of CUDA to copy exactly the retrieved KV blocks
+into a contiguous execution buffer. TPU adaptation: a scalar-prefetch gather —
+the top-r cluster ids are prefetched into SMEM and drive the BlockSpec
+index_map, so each grid step DMAs one (cap, hd) cluster block HBM->VMEM and
+writes it to the contiguous output. This is the paged-attention gather idiom;
+"skipping fragmented regions" falls out of block indexing for free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(idx_ref, k_src, v_src, k_dst, v_dst):
+    k_dst[...] = k_src[...]
+    v_dst[...] = v_src[...]
+
+
+def block_gather_pallas(idx, k_store, v_store, *, interpret: bool = False):
+    """Gather cluster blocks into a contiguous execution buffer.
+
+    idx: (BH, r) int32 cluster ids; k_store/v_store: (BH, M, cap, hd).
+    Returns (k_out, v_out): (BH, r, cap, hd).
+    """
+    BH, M, cap, hd = k_store.shape
+    r = idx.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(BH, r),
+        in_specs=[
+            pl.BlockSpec((1, 1, cap, hd),
+                         lambda b, i, idx_ref: (b, idx_ref[b, i], 0, 0)),
+            pl.BlockSpec((1, 1, cap, hd),
+                         lambda b, i, idx_ref: (b, idx_ref[b, i], 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, cap, hd), lambda b, i, idx_ref: (b, i, 0, 0)),
+            pl.BlockSpec((1, 1, cap, hd), lambda b, i, idx_ref: (b, i, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, r, cap, hd), k_store.dtype),
+            jax.ShapeDtypeStruct((BH, r, cap, hd), v_store.dtype),
+        ],
+        interpret=interpret,
+    )(idx, k_store, v_store)

@@ -1,0 +1,25 @@
+"""Jit'd wrapper for the execution-buffer gather kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.gather.kernel import block_gather_pallas
+
+
+def on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_gather_op(idx, k_store, v_store, *, interpret: bool = False):
+    """idx: (B, H, r); stores: (B, H, M, cap, hd) -> (B, H, r, cap, hd)."""
+    B, H, r = idx.shape
+    _, _, M, cap, hd = k_store.shape
+    ko, vo = block_gather_pallas(
+        idx.reshape(B * H, r).astype("int32"),
+        k_store.reshape(B * H, M, cap, hd),
+        v_store.reshape(B * H, M, cap, hd),
+        interpret=interpret)
+    return (ko.reshape(B, H, r, cap, hd), vo.reshape(B, H, r, cap, hd))

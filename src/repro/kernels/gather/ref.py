@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the block-gather kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def block_gather_ref(idx, k_store, v_store):
+    """idx: (BH, r); stores: (BH, M, cap, hd) -> (BH, r, cap, hd) pair."""
+    take = lambda s: jnp.take_along_axis(
+        s, idx[:, :, None, None], axis=1)
+    return take(k_store), take(v_store)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: segmented spherical k-means iteration (paper Sec. 4.6).
+
+The paper implements segmented clustering as a Triton kernel parallel over
+(head, segment). TPU adaptation: grid = (S,) flattened (batch*head*segment);
+per step one segment's keys (n, d) and centroids (k, d) are VMEM-resident,
+the (n, k) similarity runs on the MXU, and the centroid update is a one-hot
+matmul (again MXU) — no scatter needed. Assignment, new centroid sums and
+counts are produced in one pass; the iteration loop lives in ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, cent_ref, sums_ref, counts_ref, assign_ref):
+    x = x_ref[0]                                           # (n, d) f32
+    c = cent_ref[0]                                        # (k, d) f32
+    cn = c * jax.lax.rsqrt(jnp.maximum(
+        jnp.sum(c * c, axis=-1, keepdims=True), 1e-16))    # spherical
+    sim = jax.lax.dot_general(x, cn, (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (n, k)
+    assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)    # (n,)
+    k = c.shape[0]
+    onehot = (assign[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (x.shape[0], k), 1)).astype(jnp.float32)
+    sums_ref[0] = jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (k, d)
+    counts_ref[0] = jnp.sum(onehot, axis=0)                # (k,)
+    assign_ref[0] = assign
+
+
+def kmeans_step_pallas(x, cent, *, interpret: bool = False):
+    """One assignment+update step over stacked segments.
+
+    x: (S, n, d) f32 (pre-centered keys); cent: (S, k, d) f32.
+    Returns (sums (S,k,d), counts (S,k), assign (S,n)).
+    """
+    S, n, d = x.shape
+    k = cent.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(S,),
+        in_specs=[
+            pl.BlockSpec((1, n, d), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, k, d), lambda s: (s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k, d), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, k), lambda s: (s, 0)),
+            pl.BlockSpec((1, n), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, k, d), jnp.float32),
+            jax.ShapeDtypeStruct((S, k), jnp.float32),
+            jax.ShapeDtypeStruct((S, n), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, cent)

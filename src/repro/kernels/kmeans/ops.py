@@ -1,0 +1,28 @@
+"""Jit'd wrapper: full segmented spherical k-means using the Pallas step."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kmeans.kernel import kmeans_step_pallas
+
+
+def on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "interpret"))
+def segmented_kmeans_op(x, cent0, *, iters: int, interpret: bool = False):
+    """x: (S, n, d) f32; cent0: (S, k, d) f32. Returns (centroids, assign)."""
+
+    def body(cent, _):
+        sums, counts, _ = kmeans_step_pallas(x, cent, interpret=interpret)
+        cent = jnp.where(counts[..., None] > 0,
+                         sums / jnp.maximum(counts[..., None], 1.0), cent)
+        return cent, None
+
+    cent, _ = jax.lax.scan(body, cent0, None, length=iters)
+    _, _, assign = kmeans_step_pallas(x, cent, interpret=interpret)
+    return cent, assign

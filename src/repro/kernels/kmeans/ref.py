@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the segmented k-means step kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_step_ref(x, cent):
+    """x: (S, n, d); cent: (S, k, d) -> (sums, counts, assign)."""
+    cn = cent * jax.lax.rsqrt(
+        jnp.maximum(jnp.sum(cent * cent, axis=-1, keepdims=True), 1e-16))
+    sim = jnp.einsum("snd,skd->snk", x, cn)
+    assign = jnp.argmax(sim, axis=-1).astype(jnp.int32)
+    k = cent.shape[1]
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+    sums = jnp.einsum("snk,snd->skd", onehot, x)
+    counts = jnp.sum(onehot, axis=1)
+    return sums, counts, assign
+
+
+def kmeans_ref(x, cent0, iters: int):
+    """Full loop oracle: returns (final centroids, assign)."""
+    cent = cent0
+    for _ in range(iters):
+        sums, counts, _ = kmeans_step_ref(x, cent)
+        cent = jnp.where(counts[..., None] > 0,
+                         sums / jnp.maximum(counts[..., None], 1.0), cent)
+    _, _, assign = kmeans_step_ref(x, cent)
+    return cent, assign

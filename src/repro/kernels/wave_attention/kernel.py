@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: fused tripartite wave attention (decode step).
+
+The paper modifies FlashAttention to (a) run over the gathered execution
+buffer (steady zone + retrieved cluster blocks) and (b) merge the centroid
+estimation zone into the same online softmax (Sec. 4.6). TPU adaptation:
+
+* grid = (B*Hkv, T_blocks): each step streams one (Tb, hd) K/V tile
+  HBM->VMEM; the (G, hd) query tile and (G,) running (m, l) plus the (G, hd)
+  accumulator live in VMEM scratch across the T-block loop (classic flash).
+* the estimation zone — (G, E) cluster logits + (E, hd) value sums — is folded
+  in at the *last* grid step, re-using the same max-stabilized merge; this is
+  the "weighted attention" modification of the paper's FlashAttention kernel.
+* hd / Tb / E are padded by ops.py to MXU/VPU-friendly multiples (128 lanes).
+
+Validated on CPU with interpret=True against ``ref.tripartite_merge_jnp``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, est_logit_ref, cs_ref, vs_ref,
+            o_ref, m_scr, l_scr, acc_scr, *, softcap, scale, nblocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                    # (G, hd) f32
+    k = k_ref[0]                                    # (Tb, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = valid_ref[0] > 0                           # (Tb,)
+    s = jnp.where(ok[None, :], s, NEG)              # (G, Tb)
+
+    m_prev = m_scr[...]                             # (G, 1) layout -> (G,)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))
+    m_safe = jnp.maximum(m_new, -1e20)
+    corr = jnp.where(jnp.isfinite(m_prev[:, 0]),
+                     jnp.exp(m_prev[:, 0] - m_safe), 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(ok[None, :], p, 0.0)
+    l_scr[...] = (l_scr[...] * corr[:, None]
+                  + jnp.sum(p, axis=-1, keepdims=True))
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new[:, None]
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        est_logit = est_logit_ref[0]                # (G, E)
+        cs = cs_ref[0]                              # (G, E)
+        vs = vs_ref[0]                              # (E, hd)
+        m_prev = m_scr[...][:, 0]
+        m_fin = jnp.maximum(jnp.maximum(m_prev, jnp.max(est_logit, axis=-1)),
+                            -1e20)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_fin), 0.0)
+        live = est_logit > NEG / 2
+        w_den = jnp.where(live, jnp.exp(est_logit - m_fin[:, None]), 0.0)
+        w_num = jnp.where(live, jnp.exp(cs - m_fin[:, None]), 0.0)
+        den = l_scr[...][:, 0] * corr + jnp.sum(w_den, axis=-1)
+        num = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            w_num, vs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0] = num / jnp.maximum(den, 1e-30)[:, None]
+
+
+def wave_attention_pallas(q, k, v, valid, est_logit, cs, vs, *,
+                          softcap=None, block_t: int = 512,
+                          interpret: bool = False):
+    """q: (BH, G, hd) f32; k/v: (BH, T, hd) f32; valid: (BH, T) int32;
+    est_logit/cs: (BH, G, E) f32; vs: (BH, E, hd) f32 -> (BH, G, hd) f32.
+    T must be a multiple of block_t (ops.py pads)."""
+    BH, G, hd = q.shape
+    T = k.shape[1]
+    E = vs.shape[1]
+    assert T % block_t == 0, (T, block_t)
+    nblocks = T // block_t
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_kernel, softcap=softcap, scale=scale,
+                             nblocks=nblocks)
+    grid = (BH, nblocks)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_t, hd), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_t), lambda b, j: (b, j)),
+            pl.BlockSpec((1, G, E), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, G, E), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, E, hd), lambda b, j: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid, est_logit, cs, vs)

@@ -1,0 +1,64 @@
+"""Jit'd wrapper around the fused wave-attention Pallas kernel.
+
+Handles layout: flattens (B, Hkv) -> BH, pads T to the kernel's block size
+and E/hd to VPU-friendly multiples, then restores shapes. Padded exec-buffer
+slots are masked invalid; padded estimation slots carry NEG logits.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wave_attention.kernel import NEG, wave_attention_pallas
+
+
+def on_cpu() -> bool:
+    return jax.devices()[0].platform == "cpu"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_t", "interpret"))
+def wave_attention_merge(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
+                         softcap=None, block_t: int = 512,
+                         interpret: bool = False):
+    """Same contract as ``core.attention.tripartite_merge_jnp``:
+    qg (B,H,G,hd), k/v (B,H,T,hd), valid (B,H,T) bool,
+    est_logit/cs_e (B,H,G,E), vs_e (B,H,E,hd) -> (B,H,G,hd) f32."""
+    B, H, G, hd = qg.shape
+    T = k_exec.shape[2]
+    E = vs_e.shape[2]
+    f32 = jnp.float32
+
+    def flat(a):
+        return a.reshape((B * H,) + a.shape[2:])
+
+    q = flat(qg).astype(f32)
+    k = flat(k_exec).astype(f32)
+    v = flat(v_exec).astype(f32)
+    ok = flat(valid).astype(jnp.int32)
+    el = flat(est_logit).astype(f32)
+    cs = flat(cs_e).astype(f32)
+    vs = flat(vs_e).astype(f32)
+
+    bt = min(block_t, max(128, T))
+    k, _ = _pad_to(k, 1, bt)
+    v, _ = _pad_to(v, 1, bt)
+    ok, _ = _pad_to(ok, 1, bt)                      # pads are 0 => invalid
+    el = jnp.pad(el, ((0, 0), (0, 0), (0, (-E) % 128)), constant_values=NEG)
+    cs = jnp.pad(cs, ((0, 0), (0, 0), (0, (-E) % 128)), constant_values=NEG)
+    vs, _ = _pad_to(vs, 1, 128)
+
+    out = wave_attention_pallas(q, k, v, ok, el, cs, vs, softcap=softcap,
+                                block_t=bt, interpret=interpret)
+    return out.reshape(B, H, G, hd)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused wave-attention kernel."""
+from __future__ import annotations
+
+from repro.core.attention import tripartite_merge_jnp
+
+
+def wave_attention_ref(q, k, v, valid, est_logit, cs, vs, *, softcap=None):
+    """Flat-batch oracle. q: (BH, G, hd); k/v: (BH, T, hd); valid: (BH, T);
+    est_logit/cs: (BH, G, E); vs: (BH, E, hd) -> (BH, G, hd) f32."""
+    add = lambda a: a[:, None]                     # (BH, ...) -> (BH, 1, ...)
+    out = tripartite_merge_jnp(add(q), add(k), add(v), add(valid > 0),
+                               add(est_logit), add(cs), add(vs),
+                               softcap=softcap)
+    return out[:, 0]

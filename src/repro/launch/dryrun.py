@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+# combination on placeholder devices, record memory/cost analysis + roofline.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2_2b --shape decode_32k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh pod1 --out EXP.jsonl
+#
+# NOTE: the XLA_FLAGS lines above MUST precede any jax import (device count is
+# locked at first init). Only this entrypoint sets it — tests/benches see 1 CPU.
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs.registry import ARCH_IDS, get_config, input_specs
+from repro.launch import roofline as R
+from repro.launch import sharding as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.serving.steps import make_step
+from repro.training.optimizer import AdamWConfig, AdamWState
+from repro.training.train_loop import TrainState
+
+
+def _drop_lead(spec):
+    from jax.sharding import PartitionSpec as P
+    return P(*tuple(spec)[1:])
+
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    return None  # every assigned arch has a decode path (see DESIGN)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              runtime: str = "retro", gen_headroom: int = 1024,
+              verbose: bool = True, moe_groups: int = 0,
+              serial_segments: bool = False, unroll_layers: bool = False,
+              distributed: bool = False, per_layer_state: bool = False,
+              cluster_cap: int = 0):
+    cfg = get_config(arch)
+    if moe_groups and cfg.moe is not None:
+        cfg = cfg.replace(moe_dispatch_groups=moe_groups)
+    import dataclasses
+    if serial_segments:
+        cfg = cfg.replace(retro=dataclasses.replace(
+            cfg.retro, serial_prefill_segments=True))
+    if cluster_cap:
+        cfg = cfg.replace(retro=dataclasses.replace(
+            cfg.retro, cluster_cap=cluster_cap))
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    step = make_step(cfg, shape, runtime=runtime, gen_headroom=gen_headroom)
+    batch_abs = input_specs(cfg, shape)
+
+    with mesh:
+        if shape.kind == "train":
+            from repro.training.optimizer import init_adamw
+            params_abs = M.param_specs(cfg)
+            opt_abs = jax.eval_shape(init_adamw, params_abs)
+            ts_abs = TrainState(params=params_abs, opt=opt_abs)
+            ts_spec = S.to_named(S.train_state_pspecs(cfg, ts_abs, mesh), mesh)
+            b_spec = S.to_named(S.batch_pspecs(cfg, batch_abs, mesh), mesh)
+            jitted = jax.jit(step, in_shardings=(ts_spec, b_spec),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(ts_abs, batch_abs)
+        elif shape.kind == "prefill":
+            params_abs = M.param_specs(cfg)
+            p_spec = S.to_named(S.param_pspecs(cfg, params_abs, mesh), mesh)
+            b_spec = S.to_named(S.batch_pspecs(cfg, batch_abs, mesh), mesh)
+            jitted = jax.jit(step, in_shardings=(p_spec, b_spec))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs = M.param_specs(cfg)
+            state_rt = "retro" if runtime == "retro_split" else runtime
+            state_abs = M.serve_state_specs(cfg, shape.global_batch,
+                                            shape.seq_len, runtime=state_rt,
+                                            gen_headroom=gen_headroom)
+            p_spec = S.to_named(S.param_pspecs(cfg, params_abs, mesh), mesh)
+            s_spec = S.to_named(
+                S.serve_state_pspecs(cfg, state_abs, mesh,
+                                     shape.global_batch), mesh)
+            t_spec = S.to_named(S.batch_pspecs(cfg, batch_abs, mesh), mesh)
+            if runtime == "retro_split":
+                from repro.models.transformer import split_state
+                from repro.serving.steps import make_serve_step_split
+                step = make_serve_step_split(
+                    cfg, shape.seq_len, gen_headroom=gen_headroom,
+                    unroll=unroll_layers or distributed,
+                    mesh=mesh if distributed else None)
+                cold_abs, hot_abs = split_state(state_abs.kv)
+                cold_sp, hot_sp = split_state(s_spec.kv)
+                if per_layer_state:
+                    L = cfg.n_layers
+                    sl = lambda t, i: jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), t)
+                    cold_abs = [jax.tree.map(
+                        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                        cold_abs) for _ in range(L)]
+                    cold_sp = [jax.tree.map(
+                        lambda ns: type(ns)(ns.mesh, _drop_lead(ns.spec)),
+                        cold_sp) for _ in range(L)]
+                jitted = jax.jit(step, in_shardings=(p_spec, cold_sp, hot_sp,
+                                                     t_spec["token"]),
+                                 donate_argnums=(2,))
+                lowered = jitted.lower(params_abs, cold_abs, hot_abs,
+                                       batch_abs["token"])
+            else:
+                jitted = jax.jit(step, in_shardings=(p_spec, s_spec,
+                                                     t_spec["token"]),
+                                 donate_argnums=(1,))
+                lowered = jitted.lower(params_abs, state_abs,
+                                       batch_abs["token"])
+
+        lower_s = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = R.collective_bytes(compiled.as_text())
+    peak = float(getattr(mem, "temp_size_in_bytes", 0)
+                 + getattr(mem, "argument_size_in_bytes", 0)
+                 + getattr(mem, "output_size_in_bytes", 0)
+                 - getattr(mem, "alias_size_in_bytes", 0))
+    rf = R.derive(cfg, shape, mesh_name, chips, cost, coll, peak_mem=peak,
+                  note=f"runtime={runtime}"
+                  + (f";moe_groups={moe_groups}" if moe_groups else "")
+                  + (";serial_segments" if serial_segments else "")
+                  + (";unroll" if unroll_layers else "")
+                  + (";distributed" if distributed else "")
+                  + (";per_layer_state" if per_layer_state else "")
+                  + (f";cap={cluster_cap}" if cluster_cap else ""))
+    rec = rf.as_dict()
+    rec.update({
+        "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+        "arg_bytes": float(getattr(mem, "argument_size_in_bytes", 0)),
+        "temp_bytes": float(getattr(mem, "temp_size_in_bytes", 0)),
+        "output_bytes": float(getattr(mem, "output_size_in_bytes", 0)),
+        "coll_breakdown": {k: v for k, v in coll.items() if v},
+        "runtime": runtime,
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name} ({runtime}): "
+              f"OK compile={compile_s:.1f}s "
+              f"flops/chip={rec['flops_per_chip']:.3e} "
+              f"bytes/chip={rec['bytes_per_chip']:.3e} "
+              f"coll/chip={rec['coll_bytes_per_chip']:.3e} "
+              f"dominant={rec['dominant']} peak_mem={peak/2**30:.2f}GiB")
+        print(f"  memory_analysis: args={rec['arg_bytes']/2**30:.2f}GiB "
+              f"temps={rec['temp_bytes']/2**30:.2f}GiB "
+              f"out={rec['output_bytes']/2**30:.2f}GiB (per device)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod1", choices=["pod1", "pod2", "both"])
+    ap.add_argument("--runtime", default="retro", choices=["retro", "full", "retro_split"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="append results to jsonl")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="grouped MoE dispatch (Perf iteration; 0 = global)")
+    ap.add_argument("--serial-segments", action="store_true",
+                    help="lax.map prefill clustering (Perf iteration)")
+    ap.add_argument("--unroll-layers", action="store_true",
+                    help="unroll the decode layer scan (Perf iteration)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="shard_map distributed retrieval (beyond-paper)")
+    ap.add_argument("--per-layer-state", action="store_true",
+                    help="per-layer cold-state args (Perf iteration)")
+    ap.add_argument("--cluster-cap", type=int, default=0,
+                    help="override retro cluster capacity (Perf iteration)")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = lower_one(arch, shape, multi_pod=mp,
+                                    runtime=args.runtime,
+                                    moe_groups=args.moe_groups,
+                                    serial_segments=args.serial_segments,
+                                    unroll_layers=args.unroll_layers,
+                                    distributed=args.distributed,
+                                    per_layer_state=args.per_layer_state,
+                                    cluster_cap=args.cluster_cap)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps(rec) + "\n")
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, shape, mp, str(e)[:200]))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nALL DRY-RUNS PASSED")
+
+
+if __name__ == "__main__":
+    main()

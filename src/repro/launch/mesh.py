@@ -1,0 +1,26 @@
+"""Production meshes for the dry-run.
+
+Functions (not module constants) so importing never touches jax device state.
+Target: TPU v5e — 16x16 = 256 chips/pod, 2 pods = 512 chips.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU multi-device tests (XLA_FLAGS host device count)."""
+    return jax.make_mesh(shape, axes)
+
+
+# TPU v5e hardware constants (per chip) for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s (~per link)
+HBM_BYTES = 16 * 1024 ** 3        # 16 GiB

@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# Perf-comparison harness (§Perf): lowers ONE decode-attention layer at full
+# production geometry under three runtimes and derives roofline terms:
+#
+#   full      — dense-KV full attention (the paper's baseline)
+#   baseline  — paper-faithful wave attention under pjit: cluster stores
+#               sharded on 'model', GLOBAL top-r, XLA inserts the gather
+#               collectives (KV-bytes payload)
+#   dist      — beyond-paper distributed wave attention: shard_map local
+#               top-r/n + one LSE psum ((num,den,m) payload)
+#
+#   PYTHONPATH=src python -m repro.launch.perfcmp --arch gemma2_9b \
+#       --shape long_500k --mode all --out perf.jsonl
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.core import attention as wa
+from repro.core.distributed import distributed_wave_attention
+from repro.core.wave_index import init_wave_state
+from repro.core.zones import plan_zones
+from repro.launch import roofline as R
+from repro.launch import sharding as S
+from repro.launch.mesh import make_production_mesh
+
+
+def _state_shardings(cfg, mesh, B, M, layout: str):
+    """NamedShardings for a single-layer WaveState (B, H, M, ...)."""
+    ba = S.batch_axes(mesh, B)
+
+    def spec(name, nd, mdim):
+        s = [None] * nd
+        if ba is not None:
+            s[0] = ba
+        if layout == "cluster" and mdim is not None:
+            s[mdim] = "model"
+        return NamedSharding(mesh, P(*s))
+
+    from repro.core.wave_index import WaveState
+    a = cfg.attn
+    fields = {
+        "k_store": (5, 2), "v_store": (5, 2), "pos_store": (4, 2),
+        "centroid": (4, 2), "vsum": (4, 2), "size": (3, 2), "stored": (3, 2),
+        "max_pos": (3, 2), "n_clusters": (0, None), "sink_k": (4, None),
+        "sink_v": (4, None), "local_k": (4, None), "local_v": (4, None),
+        "local_len": (0, None), "length": (0, None),
+    }
+    return WaveState(**{f: (spec(f, nd, md) if nd else
+                            NamedSharding(mesh, P()))
+                        for f, (nd, md) in fields.items()})
+
+
+def lower_mode(arch: str, shape_name: str, mode: str, multi_pod=False,
+               verbose=True):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    assert shape.kind == "decode"
+    a, retro = cfg.attn, cfg.retro
+    B, Sq = shape.global_batch, shape.seq_len
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 512 if multi_pod else 256
+    plan = plan_zones(Sq, retro, 1024)
+    dt = jnp.dtype(cfg.dtype)
+    q_abs = jax.ShapeDtypeStruct((B, a.n_heads, a.head_dim), dt)
+    ba = S.batch_axes(mesh, B)
+    q_shard = NamedSharding(mesh, P(ba, None, None))
+
+    t0 = time.time()
+    with mesh:
+        if mode == "full":
+            cache_abs = jax.eval_shape(
+                lambda: wa.init_dense_cache(B, a.n_kv_heads, Sq + 1024,
+                                            a.head_dim, dt))
+            seq_ok = (Sq + 1024) % mesh.shape["model"] == 0
+            c_spec = jax.tree.map(
+                lambda l: NamedSharding(mesh, P(
+                    ba, None, "model" if (l.ndim == 4 and seq_ok) else None))
+                if l.ndim else NamedSharding(mesh, P()), cache_abs)
+
+            def step(q, cache):
+                return wa.full_attention_decode(q, cache, softcap=a.softcap)
+
+            lowered = jax.jit(step, in_shardings=(q_shard, c_spec)).lower(
+                q_abs, cache_abs)
+        else:
+            state_abs = jax.eval_shape(
+                lambda: init_wave_state(B, a.n_kv_heads, a.head_dim,
+                                        plan.m_max, retro, dt))
+            layout = "cluster"
+            s_spec = _state_shardings(cfg, mesh, B, plan.m_max, layout)
+            if mode == "baseline":
+                def step(q, state):
+                    return wa.wave_attention_decode(
+                        q, state, retro, plan, softcap=a.softcap).out
+            else:  # dist
+                def step(q, state):
+                    return distributed_wave_attention(
+                        q, state, retro, plan, mesh, softcap=a.softcap)
+            lowered = jax.jit(step, in_shardings=(q_shard, s_spec)).lower(
+                q_abs, state_abs)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    coll = R.collective_bytes(compiled.as_text())
+    rf = R.derive(cfg, shape, "2x16x16" if multi_pod else "16x16", chips,
+                  cost, coll, note=f"attnlayer-{mode}")
+    rec = rf.as_dict()
+    rec.update({"mode": mode, "compile_s": round(compile_s, 1),
+                "coll_breakdown": {k: v for k, v in coll.items() if v}})
+    if verbose:
+        print(f"[perfcmp] {arch} x {shape_name} [{mode}]: "
+              f"flops={rec['flops_per_chip']:.3e} "
+              f"bytes={rec['bytes_per_chip']:.3e} "
+              f"coll={rec['coll_bytes_per_chip']:.3e} "
+              f"terms(s)=({rec['compute_s']:.2e},{rec['memory_s']:.2e},"
+              f"{rec['collective_s']:.2e}) dom={rec['dominant']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2_9b")
+    ap.add_argument("--shape", default="long_500k",
+                    choices=["decode_32k", "long_500k"])
+    ap.add_argument("--mode", default="all",
+                    choices=["full", "baseline", "dist", "all"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    modes = ["full", "baseline", "dist"] if args.mode == "all" else [args.mode]
+    for mode in modes:
+        rec = lower_mode(args.arch, args.shape, mode,
+                         multi_pod=args.multi_pod)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

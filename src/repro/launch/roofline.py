@@ -1,0 +1,122 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory term     = HLO_bytes_per_chip / HBM_bw
+    collective term = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` reports the *partitioned per-device* module, so
+per-chip terms come out directly (equivalent to the global/(chips·rate) form).
+Collective bytes are not in cost_analysis — we parse the optimized HLO and sum
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  f32[8,128]{1,0}  or bf16[16]  (operand type tokens)
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|"
+                       r"f64|c64|c128)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match instruction lines: %x = TYPE collective-op(OPERANDS...)
+        m = re.match(r"%?[\w.\-]+\s*=\s*[^=]*?\b([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((c for c in _COLLECTIVES if op.startswith(c)), None)
+        if kind is None:
+            continue
+        # operand types are inside the call parens; result type precedes op.
+        inside = s[s.index("(") + 1:]
+        ops_bytes = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(inside))
+        if ops_bytes == 0:  # fall back to result type (start-of-line)
+            head = s[: s.index(op)]
+            ops_bytes = sum(_shape_bytes(d, dims)
+                            for d, dims in _SHAPE_RE.findall(head))
+        out[kind] += ops_bytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_ratio: float            # MODEL_FLOPS / (HLO_FLOPs * chips)
+    peak_mem_bytes: float = 0.0
+    note: str = ""
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """MODEL_FLOPS convention: 6·N·D train, 2·N·D forward (N = active params)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        toks = shape.seq_len * shape.global_batch
+        return 6.0 * n_active * toks
+    if shape.kind == "prefill":
+        toks = shape.seq_len * shape.global_batch
+        return 2.0 * n_active * toks
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def derive(cfg: ModelConfig, shape: InputShape, mesh_name: str, chips: int,
+           cost: Dict, coll: Dict[str, int], peak_mem: float = 0.0,
+           note: str = "") -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0))
+    cs = flops / PEAK_FLOPS_BF16
+    ms = byts / HBM_BW
+    ls = cb / ICI_BW_PER_LINK
+    dom = max((("compute", cs), ("memory", ms), ("collective", ls)),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    ratio = mf / max(flops * chips, 1.0)
+    return Roofline(arch=cfg.arch_id, shape=shape.name, mesh=mesh_name,
+                    chips=chips, flops_per_chip=flops, bytes_per_chip=byts,
+                    coll_bytes_per_chip=cb, compute_s=cs, memory_s=ms,
+                    collective_s=ls, dominant=dom, model_flops_global=mf,
+                    useful_ratio=ratio, peak_mem_bytes=peak_mem, note=note)

@@ -1,0 +1,200 @@
+"""Sharding rules: map every parameter / serve-state / batch leaf to a
+PartitionSpec over the ('pod', 'data', 'model') production mesh.
+
+Conventions (Megatron-style tensor parallel + data parallel):
+  * batch dims           -> ('pod','data') when divisible, else replicated
+  * qkv/up projections   -> column-parallel (output dim on 'model')
+  * out/down projections -> row-parallel (input dim on 'model')
+  * MoE experts          -> expert axis on 'model' when E % model == 0,
+                            else fall back to d_ff sharding (mixtral E=8)
+  * embeddings / lm head -> vocab on 'model'
+  * wave-index stores    -> kv-head axis on 'model' when divisible, else the
+                            CLUSTER axis on 'model' (the baseline whose gather
+                            collectives the §Perf loop attacks)
+  * optimizer moments    -> same spec as their parameter (ZeRO-free TP)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh, B: int):
+    """Largest prefix of ('pod','data') that divides B."""
+    names = mesh.axis_names
+    if "pod" in names:
+        pod, data = mesh.shape["pod"], mesh.shape["data"]
+        if B % (pod * data) == 0:
+            return ("pod", "data")
+        if B % data == 0:
+            return ("data",)
+        return None
+    data = mesh.shape["data"]
+    return ("data",) if B % data == 0 else None
+
+
+def _model_n(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return tuple(names)
+
+
+def _rep(leaf):
+    return P()
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_pspecs(cfg: ModelConfig, abstract_params, mesh: Mesh):
+    mn = _model_n(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        in_moe = "moe" in names
+        in_attn = "attn" in names or "xattn" in names
+
+        if name in ("embed",):
+            return P("model", None) if leaf.shape[0] % mn == 0 else P()
+        if name == "lm_head":
+            return P(None, "model") if leaf.shape[1] % mn == 0 else P()
+        if in_moe:
+            E = cfg.moe.num_experts
+            if name in ("w_gate", "w_up"):
+                if E % mn == 0:
+                    return P(None, "model", None, None)
+                return P(None, None, None, "model")
+            if name == "w_down":
+                if E % mn == 0:
+                    return P(None, "model", None, None)
+                return P(None, None, "model", None)
+            return P()                                     # router
+        if in_attn:
+            if name in ("wq", "wk", "wv"):
+                spec = [None] * nd
+                if leaf.shape[-1] % mn == 0:
+                    spec[-1] = "model"
+                return P(*spec)
+            if name == "wo":
+                spec = [None] * nd
+                if leaf.shape[-2] % mn == 0:
+                    spec[-2] = "model"
+                return P(*spec)
+        if name in ("w_gate", "w_up", "wr", "wk", "wv", "wg", "ck",
+                    "in_proj", "cr"):
+            spec = [None] * nd
+            if leaf.shape[-1] % mn == 0:
+                spec[-1] = "model"
+            return P(*spec)
+        if name in ("w_down", "wo", "cv", "out_proj"):
+            spec = [None] * nd
+            if leaf.shape[-2] % mn == 0:
+                spec[-2] = "model"
+            return P(*spec)
+        return P()                                         # norms, scalars, ...
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# serve state
+# ---------------------------------------------------------------------------
+
+def wave_layout(cfg: ModelConfig, mesh: Mesh) -> str:
+    """'head' when kv heads divide the model axis, else 'cluster'."""
+    return "head" if cfg.attn and cfg.attn.n_kv_heads % _model_n(mesh) == 0 \
+        else "cluster"
+
+
+def serve_state_pspecs(cfg: ModelConfig, abstract_state, mesh: Mesh, B: int):
+    """Shard the stacked per-layer KV/index state.
+
+    Leading leaf dim is the layer (or site) stack; then (B, H, M, ...) for the
+    wave index, (B, H, S, hd) for dense caches, (B, H, hd, hd|N) for
+    recurrent states.
+    """
+    mn = _model_n(mesh)
+    ba = batch_axes(mesh, B)
+    layout = wave_layout(cfg, mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        nd = len(leaf.shape)
+        if nd <= 1:                                        # scalars per layer
+            return P()
+        spec = [None] * nd
+        # (L, B, ...) — batch on dim 1 where present
+        if nd >= 2 and leaf.shape[1] == B and ba is not None:
+            spec[1] = ba
+        if name in ("k_store", "v_store", "pos_store", "centroid", "vsum",
+                    "size", "stored", "max_pos"):
+            if layout == "head" and leaf.shape[2] % mn == 0:
+                spec[2] = "model"
+            elif nd >= 4 and leaf.shape[3] % mn == 0:      # cluster axis M
+                spec[3] = "model"
+        elif name in ("k", "v") and nd == 5:               # DenseCache (L,B,H,S,hd)
+            if leaf.shape[2] % mn == 0:
+                spec[2] = "model"
+            elif leaf.shape[3] % mn == 0:                  # sequence axis
+                spec[3] = "model"
+        elif name in ("ssm", "wkv") and nd == 5:           # (L,B,H,p,n)
+            if leaf.shape[2] % mn == 0:
+                spec[2] = "model"
+        elif name in ("cross_k", "cross_v") and nd == 5:   # (L,B,F,H,hd)
+            pass
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_state)
+
+
+# ---------------------------------------------------------------------------
+# batches / train state
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg: ModelConfig, abstract_batch, mesh: Mesh):
+    def rule(path, leaf):
+        B = leaf.shape[0]
+        ba = batch_axes(mesh, B)
+        spec = [None] * len(leaf.shape)
+        if ba is not None:
+            spec[0] = ba
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_batch)
+
+
+def train_state_pspecs(cfg: ModelConfig, abstract_ts, mesh: Mesh):
+    """TrainState(params, opt=AdamWState(step, mu, nu)) — moments follow
+    their parameter's spec."""
+    pp = param_pspecs(cfg, abstract_ts.params, mesh)
+    from repro.training.optimizer import AdamWState
+    from repro.training.train_loop import TrainState
+    return TrainState(
+        params=pp,
+        opt=AdamWState(step=P(), mu=pp, nu=pp))
+
+
+def to_named(tree_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,57 @@
+"""Training launcher.
+
+Single-host (real devices) training on synthetic data with checkpointing:
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2_2b --reduced \
+        --steps 100 --batch 8 --seq 256 --ckpt /tmp/ckpt
+
+On a real TPU cluster the same step function is pjit'd with the sharding
+rules from ``repro.launch.sharding`` (exactly what dryrun.py lowers).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs.registry import get_config, reduced_config
+from repro.data.pipeline import lm_batches
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    data = lm_batches(cfg, args.batch, args.seq, seed=args.seed)
+    opt = AdamWConfig(lr=args.lr, warmup_steps=max(2, args.steps // 20),
+                      total_steps=args.steps)
+
+    def log(step, m):
+        print(json.dumps({"step": step, **m}), flush=True)
+
+    state, history = train(cfg, opt, data, args.steps,
+                           key=jax.random.PRNGKey(args.seed), callback=log)
+    if args.ckpt:
+        ckpt.save(args.ckpt, state, step=args.steps,
+                  meta={"arch": cfg.arch_id})
+        print(f"checkpoint saved to {args.ckpt}")
+    print(f"final loss: {history[-1]['loss']:.4f} "
+          f"(from {history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,233 @@
+"""Zamba2-style hybrid backbone (arXiv:2411.15242): a stack of Mamba-2 blocks
+with ONE shared GQA attention block (single weight set) applied every
+``shared_attn_every`` layers. The wave index applies to the shared-attention
+sites only — each application site has its own KV/index state (same weights,
+different depth => different K/V).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import attention as wa
+from repro.core.wave_index import (append_token, init_wave_state, maybe_flush,
+                                   prefill_build)
+from repro.core.zones import ZonePlan, plan_zones
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.layers import dense_init, rms_norm
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def attn_sites(cfg: ModelConfig) -> List[int]:
+    k = cfg.shared_attn_every
+    return [i for i in range(cfg.n_layers) if i % k == k - 1]
+
+
+def init_hybrid(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 4)
+    layers = jax.vmap(lambda k: mamba2.init_layer(k, cfg))(ks[: cfg.n_layers])
+    a = cfg.attn
+    shared = {
+        "ln1": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "ln2": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "attn": L.init_attention(ks[-3], cfg.d_model, a.n_heads, a.n_kv_heads,
+                                 a.head_dim, _dtype(cfg)),
+        "mlp": L.init_mlp(ks[-2], cfg.d_model, cfg.d_ff, _dtype(cfg)),
+    }
+    return {
+        "embed": dense_init(ks[-1], (cfg.vocab, cfg.d_model), scale=cfg.d_model ** -0.5,
+                            dtype=_dtype(cfg)),
+        "layers": layers,
+        "shared": shared,
+        "final_norm": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+    }
+
+
+def _shared_block_seq(sp, cfg: ModelConfig, x, positions):
+    """Shared attention + MLP block over a full sequence (train/prefill)."""
+    a = cfg.attn
+    B, T, _ = x.shape
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(sp["attn"], h, a.n_heads, a.n_kv_heads,
+                              a.head_dim, positions, a.rope_theta)
+    o = L.flash_attention_jnp(q, k, v, causal=True, softcap=a.softcap)
+    x = x + o.reshape(B, T, -1) @ sp["attn"]["wo"]
+    h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(sp["mlp"], h, cfg.act)
+    return x, (k, v)
+
+
+def _group_layout(cfg: ModelConfig):
+    """Layers come in groups of (shared_attn_every mamba blocks + shared attn)
+    with a mamba-only remainder — scanned as groups to keep HLO compact."""
+    G = cfg.shared_attn_every
+    n_groups = cfg.n_layers // G
+    rem = cfg.n_layers - n_groups * G
+    return G, n_groups, rem
+
+
+def _group_params(params, cfg: ModelConfig):
+    G, n_groups, rem = _group_layout(cfg)
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * G].reshape((n_groups, G) + a.shape[1:]),
+        params["layers"])
+    tail = jax.tree.map(lambda a: a[n_groups * G:], params["layers"])
+    return grouped, tail, G, n_groups, rem
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    grouped, tail, G, n_groups, rem = _group_params(params, cfg)
+
+    @jax.checkpoint
+    def group_fn(x, gp):
+        def inner(x, lp):
+            return mamba2.layer_apply_seq(lp, cfg, x), None
+        x, _ = jax.lax.scan(inner, x, gp)
+        x, _ = _shared_block_seq(params["shared"], cfg, x, positions)
+        return x, None
+
+    if n_groups > 0:
+        x, _ = jax.lax.scan(group_fn, x, grouped)
+    for i in range(rem):
+        lp = jax.tree.map(lambda a: a[i], tail)
+        x = jax.checkpoint(lambda x, lp: mamba2.layer_apply_seq(lp, cfg, x))(
+            x, lp)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), 0.0
+
+
+class HybridServeState(NamedTuple):
+    mamba: Any              # stacked (n_layers, ...) Mamba2LayerState
+    attn_kv: Any            # stacked (n_sites, ...) WaveState or DenseCache
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, runtime: str = "retro",
+            plan: ZonePlan = None, gen_headroom: int = 4096):
+    B, T = tokens.shape
+    retro = cfg.retro
+    if plan is None:
+        plan = plan_zones(T, retro, gen_headroom)
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    positions = jnp.arange(T)
+    grouped, tail, G, n_groups, rem = _group_params(params, cfg)
+
+    def build_kv(k, v):
+        if runtime == "retro":
+            return prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg))
+        return wa.DenseCache(
+            jnp.swapaxes(jnp.pad(k, ((0, 0), (0, gen_headroom),
+                                     (0, 0), (0, 0))), 1, 2),
+            jnp.swapaxes(jnp.pad(v, ((0, 0), (0, gen_headroom),
+                                     (0, 0), (0, 0))), 1, 2),
+            jnp.asarray(T, jnp.int32))
+
+    def group_fn(x, gp):
+        def inner(x, lp):
+            x, mst = mamba2.layer_apply_seq(lp, cfg, x, return_state=True)
+            return x, mst
+        x, msts = jax.lax.scan(inner, x, gp)               # msts: (G, ...)
+        x, (k, v) = _shared_block_seq(params["shared"], cfg, x, positions)
+        return x, (msts, build_kv(k, v))
+
+    if n_groups > 0:
+        x, (m_grp, kv_states) = jax.lax.scan(group_fn, x, grouped)
+        # (n_groups, G, ...) -> (n_groups*G, ...)
+        m_states = jax.tree.map(
+            lambda a: a.reshape((n_groups * G,) + a.shape[2:]), m_grp)
+    else:
+        m_states, kv_states = None, None
+    tail_states = []
+    for i in range(rem):
+        lp = jax.tree.map(lambda a: a[i], tail)
+        x, mst = mamba2.layer_apply_seq(lp, cfg, x, return_state=True)
+        tail_states.append(mst)
+    if tail_states:
+        tail_stack = jax.tree.map(lambda *xs: jnp.stack(xs), *tail_states)
+        m_states = tail_stack if m_states is None else jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), m_states, tail_stack)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["embed"].T).astype(jnp.float32)
+    return logits, HybridServeState(mamba=m_states, attn_kv=kv_states)
+
+
+def decode_step(params, cfg: ModelConfig, state: HybridServeState, token, *,
+                runtime: str = "retro", plan: ZonePlan,
+                inline_flush: bool = False):
+    a, retro = cfg.attn, cfg.retro
+    x = params["embed"][token] * math.sqrt(cfg.d_model)
+    B = x.shape[0]
+    sites = attn_sites(cfg)
+    new_m, new_kv = [], []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda arr: arr[i], params["layers"])
+        mst = jax.tree.map(lambda arr: arr[i], state.mamba)
+        x, mst = mamba2.layer_decode_step(lp, cfg, mst, x)
+        new_m.append(mst)
+        if i in set(sites):
+            s_idx = sites.index(i)
+            kst = jax.tree.map(lambda arr: arr[s_idx], state.attn_kv)
+            sp = params["shared"]
+            h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+            pos = kst.length
+            q, k, v = L.attention_qkv(sp["attn"], h[:, None, :], a.n_heads,
+                                      a.n_kv_heads, a.head_dim,
+                                      jnp.asarray(pos)[None], a.rope_theta)
+            q, k, v = q[:, 0], k[:, 0], v[:, 0]
+            if runtime == "retro":
+                kst = append_token(kst, k, v)
+                o = wa.wave_attention_decode(q, kst, retro, plan,
+                                             softcap=a.softcap).out
+                if inline_flush:
+                    kst = maybe_flush(kst, retro)
+            else:
+                kst = wa.dense_cache_append(kst, k, v)
+                o = wa.full_attention_decode(q, kst, softcap=a.softcap)
+            x = x + o.reshape(B, -1) @ sp["attn"]["wo"]
+            h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+            x = x + L.mlp_apply(sp["mlp"], h, cfg.act)
+            new_kv.append(kst)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, HybridServeState(
+        mamba=jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+        attn_kv=jax.tree.map(lambda *xs: jnp.stack(xs), *new_kv))
+
+
+def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
+                     runtime: str = "retro", gen_headroom: int = 4096,
+                     zero_fill: bool = False) -> HybridServeState:
+    retro = cfg.retro
+    a = cfg.attn
+    plan = plan_zones(seq_len, retro, gen_headroom)
+    n_sites = len(attn_sites(cfg))
+
+    def one_kv(_):
+        if runtime == "retro":
+            st = init_wave_state(B, a.n_kv_heads, a.head_dim, plan.m_max,
+                                 retro, _dtype(cfg))
+            if not zero_fill:
+                st = st._replace(length=jnp.asarray(seq_len, jnp.int32),
+                                 local_len=jnp.asarray(retro.local, jnp.int32),
+                                 n_clusters=jnp.asarray(plan.m_max, jnp.int32))
+            return st
+        cap = seq_len + gen_headroom if not zero_fill else seq_len + gen_headroom
+        return wa.DenseCache(
+            jnp.zeros((B, a.n_kv_heads, cap, a.head_dim), _dtype(cfg)),
+            jnp.zeros((B, a.n_kv_heads, cap, a.head_dim), _dtype(cfg)),
+            jnp.asarray(0 if zero_fill else seq_len, jnp.int32))
+
+    mamba = jax.vmap(lambda _: mamba2.init_layer_state(cfg, B))(
+        jnp.arange(cfg.n_layers))
+    kv = jax.vmap(one_kv)(jnp.arange(n_sites))
+    return HybridServeState(mamba=mamba, attn_kv=kv)

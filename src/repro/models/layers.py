@@ -1,0 +1,185 @@
+"""Common functional layers: norms, RoPE, GQA attention, gated MLP.
+
+Pure-functional style: ``init_*`` returns a pytree of parameters, ``*_apply``
+consumes it. No flax/haiku — parameters are plain nested dicts so they shard
+cleanly under pjit and stack cleanly for ``lax.scan`` over layers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def rms_norm(x, gamma, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + gamma.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * gamma + beta).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv    # (..., T, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                                 # (..., T, 1, hd/2)
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int):
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, dim, 2, dtype=jnp.float32) * (-math.log(10000.0) / dim))
+    pe = jnp.zeros((length, dim), dtype=jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention (full, chunked online-softmax) — training / prefill path
+# ---------------------------------------------------------------------------
+
+def soft_cap(scores, cap: Optional[float]):
+    if cap is None or cap <= 0:
+        return scores
+    return cap * jnp.tanh(scores / cap)
+
+
+def _repeat_kv(k, n_rep: int):
+    """(B, T, Hkv, d) -> (B, T, Hkv*n_rep, d)."""
+    if n_rep == 1:
+        return k
+    b, t, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, t, h, n_rep, d)).reshape(b, t, h * n_rep, d)
+
+
+def flash_attention_jnp(q, k, v, *, causal: bool = True, window: Optional[jax.Array] = None,
+                        softcap: Optional[float] = None, q_offset=0, block: int = 1024):
+    """Chunked online-softmax attention in pure jnp (memory O(T*block)).
+
+    q: (B, Tq, Hq, d); k,v: (B, Tk, Hkv, d). GQA handled by head repetition.
+    ``window``: scalar (may be traced) sliding-window width; None => global.
+    ``q_offset``: absolute position of q[0] (for decode / cross-chunk masks).
+    Returns (B, Tq, Hq, d).
+    """
+    b, tq, hq, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    n_rep = hq // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = 1.0 / math.sqrt(d)
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    nblk = max(1, (tk + block - 1) // block)
+    pad = nblk * block - tk
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kf = kf.reshape(b, nblk, block, hq, d)
+    vf = vf.reshape(b, nblk, block, hq, d)
+
+    q_pos = q_offset + jnp.arange(tq)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kb, vb, j0 = blk
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)
+        s = soft_cap(s, softcap)
+        k_pos = j0 + jnp.arange(block)
+        valid = (k_pos < tk)[None, None, None, :]
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])[None, None]
+        if window is not None:
+            valid = valid & (k_pos[None, :] > q_pos[:, None] - window)[None, None]
+        s = jnp.where(valid, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, tq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, hq, tq), jnp.float32)
+    a0 = jnp.zeros((b, hq, tq, d), jnp.float32)
+    offs = jnp.arange(nblk) * block
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0),
+        (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), offs))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block params
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype=dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype=dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def attention_qkv(p, x, n_heads: int, n_kv: int, head_dim: int, positions, theta: float):
+    """Project + rope. x: (B, T, D) -> q (B,T,Hq,hd), k,v (B,T,Hkv,hd)."""
+    b, t, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, t, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, t, n_kv, head_dim)
+    v = (x @ p["wv"]).reshape(b, t, n_kv, head_dim)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    return q, k, v
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_up": dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+        "w_down": dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def mlp_apply(p, x, act: str = "silu"):
+    g = x @ p["w_gate"]
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+    return (g * (x @ p["w_up"])) @ p["w_down"]

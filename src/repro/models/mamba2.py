@@ -1,0 +1,145 @@
+"""Mamba-2 (SSD) block — used by the zamba2 hybrid backbone.
+
+State-space recurrence per head h with scalar decay:
+    S_t = exp(dt_t * A_h) * S_{t-1} + dt_t * x_t  (x)  B_t
+    y_t = S_t @ C_t + D_h * x_t
+Training runs a `lax.scan` over time; decode is a single O(1) update.
+A short causal depthwise conv precedes (x, B, C) as in the reference model.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.scan_utils import remat_chunked_scan
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+class Mamba2LayerState(NamedTuple):
+    ssm: jax.Array          # (B, H, hd, N) recurrent state
+    conv: jax.Array         # (B, conv_k - 1, conv_dim) conv history
+
+
+def dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return d_in, H, s.head_dim, s.state_size, s.conv_kernel
+
+
+def init_layer(key, cfg: ModelConfig):
+    D = cfg.d_model
+    d_in, H, hd, N, ck = dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        # in_proj -> [z, x, B, C, dt]
+        "in_proj": dense_init(ks[0], (D, 2 * d_in + 2 * N + H), dtype=dt),
+        "conv_w": (jax.random.normal(ks[1], (ck, conv_dim)) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "out_norm": jnp.zeros((d_in,), dt),
+        "out_proj": dense_init(ks[2], (d_in, D), dtype=dt),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, hd, N, _ = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    Bm = zxbcdt[..., 2 * d_in:2 * d_in + N]
+    Cm = zxbcdt[..., 2 * d_in + N:2 * d_in + 2 * N]
+    dtv = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, x, Bm, Cm, dtv
+
+
+def layer_apply_seq(lp, cfg: ModelConfig, xin, return_state: bool = False):
+    """Training path. xin: (B, T, D) -> (B, T, D) [, final Mamba2LayerState]."""
+    B, T, D = xin.shape
+    d_in, H, hd, N, ck = dims(cfg)
+    h = rms_norm(xin, lp["ln"], cfg.norm_eps)
+    z, x, Bm, Cm, dtv = _split_proj(cfg, h @ lp["in_proj"])
+
+    # causal depthwise conv over (x, B, C)
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)
+    pad = jnp.pad(xbc, ((0, 0), (ck - 1, 0), (0, 0)))
+    conv = sum(pad[:, i:i + T] * lp["conv_w"][i] for i in range(ck))
+    conv = jax.nn.silu(conv + lp["conv_b"])
+    x, Bm, Cm = (conv[..., :d_in], conv[..., d_in:d_in + N],
+                 conv[..., d_in + N:])
+
+    xh = x.reshape(B, T, H, hd).astype(jnp.float32)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + lp["dt_bias"])     # (B,T,H)
+    A = -jnp.exp(lp["A_log"])                                           # (H,)
+    decay = jnp.exp(dtv * A)                                            # (B,T,H)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    def step(S, inp):
+        xt, bt, ct, dct, dtt = inp                                      # per-t
+        S = dct[..., None, None] * S + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bn->bhp", S, ct)
+        return S, y
+
+    S0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    S_fin, ys = remat_chunked_scan(step, S0, (jnp.swapaxes(xh, 0, 1),
+                                        jnp.swapaxes(Bf, 0, 1),
+                                        jnp.swapaxes(Cf, 0, 1),
+                                        jnp.swapaxes(decay, 0, 1),
+                                        jnp.swapaxes(dtv, 0, 1)))
+    y = jnp.swapaxes(ys, 0, 1) + lp["D"][None, None, :, None] * xh
+    y = y.reshape(B, T, d_in).astype(xin.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, lp["out_norm"], cfg.norm_eps)
+    out = xin + y @ lp["out_proj"]
+    if return_state:
+        st = Mamba2LayerState(ssm=S_fin, conv=xbc[:, T - (ck - 1):].astype(_dtype(cfg)))
+        return out, st
+    return out
+
+
+def init_layer_state(cfg: ModelConfig, B: int) -> Mamba2LayerState:
+    d_in, H, hd, N, ck = dims(cfg)
+    return Mamba2LayerState(
+        ssm=jnp.zeros((B, H, hd, N), jnp.float32),
+        conv=jnp.zeros((B, ck - 1, d_in + 2 * N), _dtype(cfg)))
+
+
+def layer_decode_step(lp, cfg: ModelConfig, st: Mamba2LayerState, xin):
+    """Decode path. xin: (B, D) -> (out (B, D), new state)."""
+    B, D = xin.shape
+    d_in, H, hd, N, ck = dims(cfg)
+    h = rms_norm(xin, lp["ln"], cfg.norm_eps)
+    z, x, Bm, Cm, dtv = _split_proj(cfg, h @ lp["in_proj"])
+
+    xbc = jnp.concatenate([x, Bm, Cm], axis=-1)                         # (B, conv_dim)
+    hist = jnp.concatenate([st.conv, xbc[:, None, :]], axis=1)          # (B, ck, cd)
+    conv = jnp.einsum("bkc,kc->bc", hist, lp["conv_w"].astype(hist.dtype))
+    conv = jax.nn.silu(conv + lp["conv_b"])
+    x, Bm, Cm = (conv[..., :d_in], conv[..., d_in:d_in + N],
+                 conv[..., d_in + N:])
+
+    xh = x.reshape(B, H, hd).astype(jnp.float32)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + lp["dt_bias"])      # (B,H)
+    decay = jnp.exp(dtv * (-jnp.exp(lp["A_log"])))
+    S = decay[..., None, None] * st.ssm + jnp.einsum(
+        "bhp,bn->bhpn", xh * dtv[..., None], Bm.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm.astype(jnp.float32))
+    y = y + lp["D"][None, :, None] * xh
+    y = y.reshape(B, d_in).astype(xin.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, lp["out_norm"], cfg.norm_eps)
+    new = Mamba2LayerState(ssm=S, conv=hist[:, 1:])
+    return xin + y @ lp["out_proj"], new

@@ -1,0 +1,169 @@
+"""Unified model API over all architecture families.
+
+    params           = init_params(cfg, key)
+    logits, aux      = apply_train(params, cfg, batch)
+    loss             = lm_loss(params, cfg, batch)
+    logits, state    = apply_prefill(params, cfg, batch, runtime=...)
+    logits, state    = apply_decode(params, cfg, state, token, runtime=...)
+    state            = make_serve_state(cfg, B, seq_len, runtime=...)
+
+``batch`` dict keys: tokens (B, T) int32; targets (B, T) int32 (train);
+patch_embeds (B, P, D) for vlm; frames (B, F, D) for audio.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.zones import ZonePlan, plan_zones
+from repro.models import encdec, hybrid, rwkv6, transformer
+
+ATTN_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.init_transformer(cfg, key)
+    if cfg.family == "ssm":
+        return rwkv6.init_rwkv6(cfg, key)
+    if cfg.family == "hybrid":
+        return hybrid.init_hybrid(cfg, key)
+    if cfg.family == "audio":
+        return encdec.init_encdec(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def param_specs(cfg: ModelConfig, key=None) -> Any:
+    """ShapeDtypeStruct pytree of the parameters — no allocation."""
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(lambda: init_params(cfg, k))
+
+
+def _hidden_forward(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Any]:
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.forward(params, cfg, batch["tokens"],
+                                   batch.get("patch_embeds"))
+    if cfg.family == "ssm":
+        return rwkv6.forward(params, cfg, batch["tokens"])
+    if cfg.family == "hybrid":
+        return hybrid.forward(params, cfg, batch["tokens"])
+    if cfg.family == "audio":
+        return encdec.forward(params, cfg, batch["tokens"], batch["frames"])
+    raise ValueError(cfg.family)
+
+
+def apply_train(params, cfg: ModelConfig, batch):
+    """-> (logits (B, T, V) f32, aux_loss)."""
+    x, aux = _hidden_forward(params, cfg, batch)
+    if cfg.family in ATTN_FAMILIES:
+        logits = transformer.unembed(params, cfg, x)
+    else:
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, aux
+
+
+def lm_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    logits, aux = apply_train(params, cfg, batch)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask")
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        nll = nll * mask
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        denom = nll.size
+    return jnp.sum(nll) / denom + aux
+
+
+def apply_prefill(params, cfg: ModelConfig, batch, *, runtime: str = "retro",
+                  plan: Optional[ZonePlan] = None, gen_headroom: int = 4096):
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.prefill(params, cfg, batch["tokens"],
+                                   batch.get("patch_embeds"), runtime=runtime,
+                                   plan=plan, gen_headroom=gen_headroom)
+    if cfg.family == "ssm":
+        return rwkv6.prefill(params, cfg, batch["tokens"])
+    if cfg.family == "hybrid":
+        return hybrid.prefill(params, cfg, batch["tokens"], runtime=runtime,
+                              plan=plan, gen_headroom=gen_headroom)
+    if cfg.family == "audio":
+        return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
+                              runtime=runtime, plan=plan,
+                              gen_headroom=gen_headroom)
+    raise ValueError(cfg.family)
+
+
+def apply_decode(params, cfg: ModelConfig, state, token, *,
+                 runtime: str = "retro", plan: Optional[ZonePlan] = None,
+                 seq_len: Optional[int] = None, gen_headroom: int = 4096,
+                 inline_flush: bool = False):
+    if plan is None and cfg.family != "ssm":
+        assert seq_len is not None, "need plan or seq_len"
+        plan = plan_zones(seq_len, cfg.retro, gen_headroom)
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.decode_step(params, cfg, state, token,
+                                       runtime=runtime, plan=plan,
+                                       inline_flush=inline_flush)
+    if cfg.family == "ssm":
+        return rwkv6.decode_step(params, cfg, state, token)
+    if cfg.family == "hybrid":
+        return hybrid.decode_step(params, cfg, state, token, runtime=runtime,
+                                  plan=plan, inline_flush=inline_flush)
+    if cfg.family == "audio":
+        return encdec.decode_step(params, cfg, state, token, runtime=runtime,
+                                  plan=plan, inline_flush=inline_flush)
+    raise ValueError(cfg.family)
+
+
+def flush_state(cfg: ModelConfig, state, *, runtime: str = "retro"):
+    """Run the decode-time segmented-clustering index update on every layer's
+    wave state (the paper's asynchronous 1K-token update). No-op for dense
+    caches and recurrent states."""
+    if runtime != "retro" or cfg.family == "ssm":
+        return state
+    from repro.core.wave_index import flush_segment
+
+    def flush_stack(stacked):
+        return jax.vmap(lambda st: flush_segment(st, cfg.retro))(stacked)
+
+    if cfg.family in ATTN_FAMILIES:
+        return state._replace(kv=flush_stack(state.kv))
+    if cfg.family == "hybrid":
+        return state._replace(attn_kv=flush_stack(state.attn_kv))
+    if cfg.family == "audio":
+        return state._replace(self_kv=flush_stack(state.self_kv))
+    return state
+
+
+def needs_flush(cfg: ModelConfig, appended_since_flush: int) -> bool:
+    """The staging buffer holds local + update_segment tokens; it must be
+    flushed every ``update_segment`` appended tokens."""
+    return appended_since_flush >= cfg.retro.update_segment
+
+
+def make_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
+                     runtime: str = "retro", gen_headroom: int = 4096):
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.init_serve_state(cfg, B, seq_len, runtime=runtime,
+                                            gen_headroom=gen_headroom)
+    if cfg.family == "ssm":
+        return rwkv6.init_serve_state(cfg, B)
+    if cfg.family == "hybrid":
+        return hybrid.init_serve_state(cfg, B, seq_len, runtime=runtime,
+                                       gen_headroom=gen_headroom)
+    if cfg.family == "audio":
+        return encdec.init_serve_state(cfg, B, seq_len, runtime=runtime,
+                                       gen_headroom=gen_headroom)
+    raise ValueError(cfg.family)
+
+
+def serve_state_specs(cfg: ModelConfig, B: int, seq_len: int, *,
+                      runtime: str = "retro", gen_headroom: int = 4096):
+    return jax.eval_shape(
+        lambda: make_serve_state(cfg, B, seq_len, runtime=runtime,
+                                 gen_headroom=gen_headroom))

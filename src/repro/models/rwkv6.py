@@ -1,0 +1,225 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free token mixing with
+data-dependent decay. Time-mix keeps a per-head (hd x hd) matrix state with
+per-channel decay w_t computed from the input (the architecture's signature
+feature); channel-mix is a squared-ReLU FFN.
+
+The wave index is *inapplicable* here (no KV cache exists) — recorded in
+DESIGN §Arch-applicability. Decode is O(1) per token by construction, which
+is why this arch runs long_500k natively.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+from repro.models.scan_utils import remat_chunked_scan
+
+LORA_RANK = 32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+class RwkvLayerState(NamedTuple):
+    wkv: jax.Array          # (B, H, hd, hd) matrix state
+    x_tm: jax.Array         # (B, D) previous input (time-mix token shift)
+    x_cm: jax.Array         # (B, D) previous input (channel-mix token shift)
+
+
+def init_layer(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm.head_dim
+    H = D // hd
+    ks = jax.random.split(key, 16)
+    dt = _dtype(cfg)
+    return {
+        "ln1": jnp.zeros((D,), dt), "ln2": jnp.zeros((D,), dt),
+        # data-dependent token-shift mixing (5 targets: r,k,v,g,w)
+        "mu_x": jnp.full((D,), 0.5, dt),
+        "mu": jnp.full((5, D), 0.5, dt),
+        "lora_a": dense_init(ks[0], (D, 5 * LORA_RANK), dtype=dt),
+        "lora_b": (jax.random.normal(ks[1], (5, LORA_RANK, D)) * 0.01).astype(dt),
+        # projections
+        "wr": dense_init(ks[2], (D, D), dtype=dt),
+        "wk": dense_init(ks[3], (D, D), dtype=dt),
+        "wv": dense_init(ks[4], (D, D), dtype=dt),
+        "wg": dense_init(ks[5], (D, D), dtype=dt),
+        "wo": dense_init(ks[6], (D, D), dtype=dt),
+        # data-dependent decay
+        "w0": jnp.full((D,), -6.0, dt),
+        "wd_a": dense_init(ks[7], (D, LORA_RANK), dtype=dt),
+        "wd_b": (jax.random.normal(ks[8], (LORA_RANK, D)) * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[9], (D,)) * 0.1).astype(dt),   # bonus
+        "gn": jnp.ones((H, hd), dt),                               # group norm
+        # channel mix
+        "mu_ck": jnp.full((D,), 0.5, dt), "mu_cr": jnp.full((D,), 0.5, dt),
+        "ck": dense_init(ks[10], (D, F), dtype=dt),
+        "cv": dense_init(ks[11], (F, D), dtype=dt),
+        "cr": dense_init(ks[12], (D, D), dtype=dt),
+    }
+
+
+def init_rwkv6(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(ks[:-1])
+    return {
+        "embed": dense_init(ks[-1], (cfg.vocab, cfg.d_model), scale=cfg.d_model ** -0.5,
+                            dtype=_dtype(cfg)),
+        "layers": layers,
+        "final_norm": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+    }
+
+
+def _ddlerp(lp, x, x_prev):
+    """Data-dependent token-shift: returns (5, ..., D) mixed inputs."""
+    xx = x_prev - x
+    base = x + xx * lp["mu_x"]
+    feat = jnp.tanh(base @ lp["lora_a"])                   # (..., 5*rank)
+    feat = feat.reshape(feat.shape[:-1] + (5, LORA_RANK))
+    off = jnp.einsum("...fr,frd->f...d", feat, lp["lora_b"].astype(jnp.float32))
+    mu = lp["mu"].reshape((5,) + (1,) * (x.ndim - 1) + (x.shape[-1],))
+    return x[None] + xx[None] * (mu + off.astype(x.dtype))
+
+
+def _decay(lp, xw):
+    """Per-channel decay in (0, 1): exp(-exp(w0 + lora(xw)))."""
+    loraw = jnp.tanh(xw @ lp["wd_a"]) @ lp["wd_b"]
+    return jnp.exp(-jnp.exp((lp["w0"] + loraw).astype(jnp.float32)))
+
+
+def _time_mix_step(lp, H, hd, x, x_prev, S):
+    """One token. x: (B, D); S: (B, H, hd, hd). Returns (out, new_S)."""
+    B, D = x.shape
+    mixed = _ddlerp(lp, x, x_prev)                         # (5, B, D)
+    xr, xk, xv, xg, xw = mixed
+    r = (xr @ lp["wr"]).reshape(B, H, hd).astype(jnp.float32)
+    k = (xk @ lp["wk"]).reshape(B, H, hd).astype(jnp.float32)
+    v = (xv @ lp["wv"]).reshape(B, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ lp["wg"])
+    w = _decay(lp, xw).reshape(B, H, hd)                   # (B, H, hd)
+    u = lp["u"].astype(jnp.float32).reshape(H, hd)
+
+    a = jnp.einsum("bhi,bhj->bhij", k, v)                  # outer product
+    out = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * a)
+    S_new = w[..., None] * S + a
+    # per-head group norm
+    var = jnp.mean(jnp.square(out), axis=-1, keepdims=True)
+    out = out * jax.lax.rsqrt(var + 1e-6) * lp["gn"].astype(jnp.float32)[None]
+    out = out.reshape(B, H * hd).astype(x.dtype) * g
+    return out @ lp["wo"], S_new
+
+
+def _channel_mix(lp, x, x_prev):
+    xk = x + (x_prev - x) * lp["mu_ck"]
+    xr = x + (x_prev - x) * lp["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ lp["ck"]))
+    return (k @ lp["cv"]) * jax.nn.sigmoid(xr @ lp["cr"])
+
+
+def layer_apply_seq(lp, cfg: ModelConfig, x):
+    """Training path: scan over time. x: (B, T, D) -> (B, T, D)."""
+    B, T, D = x.shape
+    hd = cfg.ssm.head_dim
+    H = D // hd
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+    def step(S, inp):
+        xt, xp = inp
+        out, S = _time_mix_step(lp, H, hd, xt, xp, S)
+        return S, out
+
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, tm_out = remat_chunked_scan(step, S0, (jnp.swapaxes(h, 0, 1),
+                                              jnp.swapaxes(h_prev, 0, 1)))
+    x = x + jnp.swapaxes(tm_out, 0, 1)
+
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return x + _channel_mix(lp, h, h_prev)
+
+
+def forward(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+
+    @jax.checkpoint
+    def layer_fn(x, lp):
+        return layer_apply_seq(lp, cfg, x), None
+
+    x, _ = jax.lax.scan(layer_fn, x, params["layers"])
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), 0.0
+
+
+# ---------------------------------------------------------------------------
+# serving: O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+def init_serve_state(cfg: ModelConfig, B: int):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+
+    def one(_):
+        return RwkvLayerState(
+            wkv=jnp.zeros((B, H, hd, hd), jnp.float32),
+            x_tm=jnp.zeros((B, cfg.d_model), _dtype(cfg)),
+            x_cm=jnp.zeros((B, cfg.d_model), _dtype(cfg)))
+
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def decode_step(params, cfg: ModelConfig, state, token):
+    """token: (B,) -> (logits, new_state)."""
+    x = params["embed"][token] * math.sqrt(cfg.d_model)
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+
+    def layer_fn(x, xs):
+        lp, st = xs
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, S = _time_mix_step(lp, H, hd, h, st.x_tm, st.wkv)
+        x = x + out
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + _channel_mix(lp, h2, st.x_cm)
+        return x, RwkvLayerState(wkv=S, x_tm=h, x_cm=h2)
+
+    x, new_state = jax.lax.scan(layer_fn, x, (params["layers"], state))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x @ params["embed"].T).astype(jnp.float32), new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens):
+    """Prompt processing via the sequential path, returning the serve state."""
+    B, T = tokens.shape
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+
+    def layer_fn(x, lp):
+        B, T, D = x.shape
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h_prev = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+        def step(S, inp):
+            xt, xp = inp
+            out, S = _time_mix_step(lp, H, hd, xt, xp, S)
+            return S, out
+
+        S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        S, tm_out = jax.lax.scan(step, S0, (jnp.swapaxes(h, 0, 1),
+                                            jnp.swapaxes(h_prev, 0, 1)))
+        x = x + jnp.swapaxes(tm_out, 0, 1)
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        h2_prev = jnp.pad(h2, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+        x = x + _channel_mix(lp, h2, h2_prev)
+        st = RwkvLayerState(wkv=S, x_tm=h[:, -1], x_cm=h2[:, -1])
+        return x, st
+
+    x, state = jax.lax.scan(layer_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, -1] @ params["embed"].T).astype(jnp.float32), state

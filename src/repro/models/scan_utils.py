@@ -1,0 +1,27 @@
+"""Scan helpers: rematerialized chunked time-scans.
+
+Recurrent (RWKV/Mamba) training scans save per-step residuals for backward —
+O(T · state) memory. Chunking the scan and checkpointing each chunk bounds the
+peak at O(chunk · state + T/chunk · carry), the standard recompute trade.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def remat_chunked_scan(body, carry, xs, chunk: int = 256):
+    """Drop-in for ``lax.scan(body, carry, xs)`` with per-chunk remat."""
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T % chunk != 0 or T <= chunk:
+        return jax.lax.scan(body, carry, xs)
+    n = T // chunk
+    xs_c = jax.tree.map(lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(c, xc):
+        return jax.lax.scan(body, c, xc)
+
+    carry, ys = jax.lax.scan(outer, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((T,) + a.shape[2:]), ys)
+    return carry, ys

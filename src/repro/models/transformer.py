@@ -1,0 +1,353 @@
+"""Unified GQA transformer: dense (gemma/minitron), MoE (mixtral/kimi), VLM
+(llava backbone). Layers are weight-stacked and scanned (`lax.scan`) so the
+compiled HLO stays compact at 61 layers x 512 devices.
+
+Serve-time attention runtime is selectable:
+  * "retro" — RetroInfer wave index (the paper's technique)
+  * "full"  — dense KV cache, exact attention (the paper's baseline)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import attention as wa
+from repro.core.wave_index import (WaveState, append_token, init_wave_state,
+                                   maybe_flush, prefill_build)
+from repro.core.zones import ZonePlan, plan_zones
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_apply, moe_apply_grouped
+
+GLOBAL_WINDOW = 1.0e9   # "no sliding window" sentinel (traced-friendly)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig):
+    a = cfg.attn
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "ln2": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+        "attn": L.init_attention(k1, cfg.d_model, a.n_heads, a.n_kv_heads,
+                                 a.head_dim, _dtype(cfg)),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.moe, _dtype(cfg))
+    else:
+        p["mlp"] = L.init_mlp(k3, cfg.d_model, cfg.d_ff, _dtype(cfg))
+    return p
+
+
+def init_transformer(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(ks[: cfg.n_layers])
+    window = jnp.asarray(
+        [cfg.attn.sliding_window if kind == "l" else GLOBAL_WINDOW
+         for kind in cfg.layer_kinds()], jnp.float32)
+    params = {
+        "embed": L.dense_init(ks[-1], (cfg.vocab, cfg.d_model),
+                              scale=cfg.d_model ** -0.5, dtype=_dtype(cfg)),
+        "layers": layers,
+        "window": window,
+        "final_norm": jnp.zeros((cfg.d_model,), _dtype(cfg)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[-2], (cfg.d_model, cfg.vocab),
+                                         dtype=_dtype(cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    if patch_embeds is not None:
+        npatch = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x[:, npatch:]], axis=1)
+    return x
+
+
+def unembed(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return logits.astype(jnp.float32)
+
+
+def _ffn(lp, x, cfg: ModelConfig):
+    """x: (..., D) -> (..., D) plus aux loss scalar."""
+    if cfg.moe is not None:
+        shp = x.shape
+        y, aux = moe_apply_grouped(lp["moe"], x.reshape(-1, shp[-1]), cfg.moe,
+                                   cfg.act, groups=cfg.moe_dispatch_groups)
+        return y.reshape(shp), aux
+    return L.mlp_apply(lp["mlp"], x, cfg.act), 0.0
+
+
+# ---------------------------------------------------------------------------
+# training / scoring forward (full attention, chunked online-softmax)
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, patch_embeds=None):
+    """tokens: (B, T) -> hidden (B, T, D), aux_loss."""
+    x = embed_tokens(params, cfg, tokens, patch_embeds)
+    B, T, D = x.shape
+    positions = jnp.arange(T)
+    a = cfg.attn
+
+    @jax.checkpoint
+    def layer_fn(carry, xs):
+        x, aux = carry
+        lp, window = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, a.n_heads, a.n_kv_heads,
+                                  a.head_dim, positions, a.rope_theta)
+        o = L.flash_attention_jnp(q, k, v, causal=True, window=window,
+                                  softcap=a.softcap)
+        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, aux_l = _ffn(lp, h, cfg)
+        return (x + y, aux + aux_l), None
+
+    (x, aux), _ = jax.lax.scan(layer_fn, (x, 0.0),
+                               (params["layers"], params["window"]))
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class ServeState(NamedTuple):
+    """Stacked per-layer KV state + scalar step info. kv is either a stacked
+    WaveState (retro runtime) or stacked DenseCache (full runtime)."""
+    kv: Any
+
+
+def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None, *,
+            runtime: str = "retro", plan: Optional[ZonePlan] = None,
+            gen_headroom: int = 4096) -> Tuple[jax.Array, ServeState]:
+    """Process the prompt; returns (last-position logits, serve state)."""
+    x = embed_tokens(params, cfg, tokens, patch_embeds)
+    B, T, D = x.shape
+    positions = jnp.arange(T)
+    a = cfg.attn
+    retro = cfg.retro
+    if plan is None:
+        plan = plan_zones(T, retro, gen_headroom)
+
+    sp_blocks = cfg.sparse_prefill_blocks
+    use_sparse = sp_blocks > 0 and T % 128 == 0
+
+    def layer_fn(x, xs):
+        lp, window = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, a.n_heads, a.n_kv_heads,
+                                  a.head_dim, positions, a.rope_theta)
+        if use_sparse:
+            from repro.core.sparse_prefill import block_sparse_attention
+            o = block_sparse_attention(q, k, v, block=128,
+                                       topk_blocks=sp_blocks, window=window,
+                                       softcap=a.softcap)
+        else:
+            o = L.flash_attention_jnp(q, k, v, causal=True, window=window,
+                                      softcap=a.softcap)
+        x = x + o.reshape(B, T, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = _ffn(lp, h, cfg)
+        x = x + y
+        if runtime == "retro":
+            st = prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg))
+        else:
+            st = wa.DenseCache(
+                k=jnp.swapaxes(
+                    jnp.pad(k, ((0, 0), (0, gen_headroom), (0, 0), (0, 0))), 1, 2
+                ).astype(_dtype(cfg)),
+                v=jnp.swapaxes(
+                    jnp.pad(v, ((0, 0), (0, gen_headroom), (0, 0), (0, 0))), 1, 2
+                ).astype(_dtype(cfg)),
+                length=jnp.asarray(T, jnp.int32))
+        return x, st
+
+    x, kv = jax.lax.scan(layer_fn, x, (params["layers"], params["window"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params, cfg, x[:, -1])
+    return logits, ServeState(kv=kv)
+
+
+def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
+                runtime: str = "retro", plan: ZonePlan,
+                inline_flush: bool = False) -> Tuple[jax.Array, ServeState]:
+    """One generation step. token: (B,) int32 -> logits (B, V).
+
+    ``inline_flush=False`` keeps the segmented-clustering index update OFF the
+    hot path (the paper amortizes it to ~0.2% of decode latency by running it
+    asynchronously every 1K tokens); the serving engine calls
+    ``model.flush_state`` when the staging buffer fills. ``inline_flush=True``
+    folds it into the step (self-contained, used by some tests)."""
+    a = cfg.attn
+    retro = cfg.retro
+    x = params["embed"][token] * math.sqrt(cfg.d_model)     # (B, D)
+    B = x.shape[0]
+
+    def layer_fn(x, xs):
+        lp, lstate, window = xs
+        if runtime == "retro":
+            pos = lstate.length                              # new token position
+        else:
+            pos = lstate.length
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(
+            lp["attn"], h[:, None, :], a.n_heads, a.n_kv_heads, a.head_dim,
+            jnp.asarray(pos)[None], a.rope_theta)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B, H*, hd)
+        if runtime == "retro":
+            lstate = append_token(lstate, k, v)
+            out = wa.wave_attention_decode(q, lstate, retro, plan,
+                                           window=window, softcap=a.softcap)
+            if inline_flush:
+                lstate = maybe_flush(lstate, retro)
+            o = out.out
+        else:
+            lstate = wa.dense_cache_append(lstate, k, v)
+            o = wa.full_attention_decode(q, lstate, window=window,
+                                         softcap=a.softcap)
+        x = x + o.reshape(B, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = _ffn(lp, h, cfg)
+        return x + y, lstate
+
+    x, kv = jax.lax.scan(layer_fn, x,
+                         (params["layers"], state.kv, params["window"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), ServeState(kv=kv)
+
+
+# ---------------------------------------------------------------------------
+# Hot/cold state split (§Perf iteration 1, EXPERIMENTS.md)
+#
+# The monolithic serve step threads the full wave state through the layer
+# scan; unchanged cluster stores then appear in the scan's ys and the step's
+# outputs, which the compiled HLO materializes as full-store copies (and the
+# cost analysis charges as memory traffic). Decode only MUTATES the staging
+# buffers + counters ("hot"); the cluster stores/meta index ("cold") change
+# only at the 1K-token flush. Splitting them keeps the cold stores out of the
+# step's dataflow entirely.
+# ---------------------------------------------------------------------------
+
+COLD_FIELDS = ("k_store", "v_store", "pos_store", "centroid", "vsum", "size",
+               "stored", "max_pos", "n_clusters")
+HOT_FIELDS = ("sink_k", "sink_v", "local_k", "local_v", "local_len", "length")
+
+
+def split_state(kv: WaveState):
+    cold = {f: getattr(kv, f) for f in COLD_FIELDS}
+    hot = {f: getattr(kv, f) for f in HOT_FIELDS}
+    return cold, hot
+
+
+def join_state(cold, hot) -> WaveState:
+    return WaveState(**cold, **hot)
+
+
+def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
+                      plan: ZonePlan, unroll: bool = False, mesh=None):
+    """Retro decode with the hot/cold split: returns (logits, new_hot).
+
+    ``cold``/``hot`` are dicts of stacked (L, ...) leaves as produced by
+    ``split_state`` applied to ``ServeState.kv``.
+
+    ``unroll=True`` replaces the layer scan with an unrolled loop (§Perf
+    iteration): lax.scan bundles its xs — including the read-only cluster
+    stores — into the while-loop tuple, which buffer assignment materializes
+    as a full-store temp copy; unrolling reads the stores in place."""
+    a, retro = cfg.attn, cfg.retro
+    x = params["embed"][token] * math.sqrt(cfg.d_model)
+    B = x.shape[0]
+
+    def layer_fn(x, xs):
+        lp, cold_i, hot_i, window = xs
+        lstate = join_state(cold_i, hot_i)
+        pos = lstate.length
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(
+            lp["attn"], h[:, None, :], a.n_heads, a.n_kv_heads, a.head_dim,
+            jnp.asarray(pos)[None], a.rope_theta)
+        q, k, v = q[:, 0], k[:, 0], v[:, 0]
+        lstate = append_token(lstate, k, v)
+        if mesh is not None:
+            from repro.core.distributed import distributed_wave_attention
+            o = distributed_wave_attention(q, lstate, retro, plan, mesh,
+                                           window=window, softcap=a.softcap)
+        else:
+            o = wa.wave_attention_decode(q, lstate, retro, plan,
+                                         window=window,
+                                         softcap=a.softcap).out
+        x = x + o.reshape(B, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = _ffn(lp, h, cfg)
+        new_hot = {f: getattr(lstate, f) for f in HOT_FIELDS}
+        return x + y, new_hot
+
+    if unroll:
+        # cold may be a stacked dict of (L, ...) leaves or a per-layer list
+        # (separate args => no per-layer slices of the stacked store, which
+        # the HLO cost model charges at full-operand size; see EXPERIMENTS).
+        per_layer_cold = isinstance(cold, (list, tuple))
+        hots = []
+        kinds = cfg.layer_kinds()
+        for i in range(cfg.n_layers):
+            sl = lambda t: jax.tree.map(lambda a_: a_[i], t)
+            cold_i = cold[i] if per_layer_cold else sl(cold)
+            # static per-layer window in the unrolled path
+            win = jnp.float32(a.sliding_window if kinds[i] == "l"
+                              else GLOBAL_WINDOW)
+            x, nh = layer_fn(x, (sl(params["layers"]), cold_i, sl(hot), win))
+            hots.append(nh)
+        new_hot = jax.tree.map(lambda *xs: jnp.stack(xs), *hots)
+    else:
+        assert mesh is None, "distributed retrieval requires unroll=True"
+        x, new_hot = jax.lax.scan(
+            layer_fn, x, (params["layers"], cold, hot, params["window"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(params, cfg, x), new_hot
+
+
+def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
+                     runtime: str = "retro", gen_headroom: int = 4096) -> ServeState:
+    """Zero-initialized serve state with the same structure/shape the prefill
+    produces — used for dry-run lowering of serve_step without a real prefill."""
+    a, retro = cfg.attn, cfg.retro
+    plan = plan_zones(seq_len, retro, gen_headroom)
+
+    def one_layer(_):
+        if runtime == "retro":
+            st = init_wave_state(B, a.n_kv_heads, a.head_dim, plan.m_max,
+                                 retro, _dtype(cfg))
+            return st._replace(length=jnp.asarray(seq_len, jnp.int32),
+                               local_len=jnp.asarray(retro.local, jnp.int32),
+                               n_clusters=jnp.asarray(plan.m_max, jnp.int32))
+        return wa.DenseCache(
+            jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
+                      _dtype(cfg)),
+            jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
+                      _dtype(cfg)),
+            jnp.asarray(seq_len, jnp.int32))
+
+    kv = jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
+    return ServeState(kv=kv)

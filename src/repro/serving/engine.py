@@ -1,0 +1,136 @@
+"""Batch-synchronous serving engine.
+
+Processes requests in waves of the configured batch size (the paper's
+throughput experiments use fixed batches per context length): prefill builds
+the wave index (or dense cache), then jit'd decode steps generate tokens.
+Tracks per-wave token throughput and, in retro mode, retrieval statistics.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.zones import plan_zones
+from repro.models import model as M
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class WaveMetrics:
+    prefill_s: float = 0.0
+    decode_s: float = 0.0
+    tokens_out: int = 0
+
+    @property
+    def decode_tps(self) -> float:
+        return self.tokens_out / max(self.decode_s, 1e-9)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, runtime: str = "retro",
+                 gen_headroom: int = 1024, temperature: float = 0.0):
+        self.cfg = cfg
+        self.params = params
+        self.runtime = runtime
+        self.gen_headroom = gen_headroom
+        self.temperature = temperature
+        self._prefill_jit: Dict[int, Any] = {}
+        self._decode_jit: Dict[int, Any] = {}
+
+    def _get_fns(self, seq_len: int):
+        if seq_len not in self._prefill_jit:
+            cfg, rt, gh = self.cfg, self.runtime, self.gen_headroom
+            plan = plan_zones(seq_len, cfg.retro, gh) \
+                if cfg.family != "ssm" else None
+
+            @jax.jit
+            def prefill(params, batch):
+                return M.apply_prefill(params, cfg, batch, runtime=rt,
+                                       plan=plan, gen_headroom=gh)
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def decode(params, state, token):
+                return M.apply_decode(params, cfg, state, token, runtime=rt,
+                                      plan=plan, seq_len=seq_len,
+                                      gen_headroom=gh)
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def flush(state):
+                return M.flush_state(cfg, state, runtime=rt)
+
+            self._prefill_jit[seq_len] = prefill
+            self._decode_jit[seq_len] = (decode, flush)
+        return self._prefill_jit[seq_len], self._decode_jit[seq_len]
+
+    def _sample(self, logits: jax.Array, key) -> jax.Array:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.temperature).astype(jnp.int32)
+
+    def run_wave(self, requests: List[Request], extra_batch: Optional[Dict] = None,
+                 seed: int = 0) -> WaveMetrics:
+        """Run one batch wave to completion (all prompts same length)."""
+        cfg = self.cfg
+        S = len(requests[0].prompt)
+        assert all(len(r.prompt) == S for r in requests)
+        prefill, (decode, flush) = self._get_fns(S)
+        metrics = WaveMetrics()
+        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in requests]))}
+        if extra_batch:
+            batch.update(extra_batch)
+        key = jax.random.PRNGKey(seed)
+
+        t0 = time.perf_counter()
+        logits, state = jax.block_until_ready(prefill(self.params, batch))
+        metrics.prefill_s = time.perf_counter() - t0
+
+        key, sub = jax.random.split(key)
+        token = self._sample(logits, sub)
+        max_new = max(r.max_new_tokens for r in requests)
+        t0 = time.perf_counter()
+        appended = 0
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if not r.done:
+                    r.out_tokens.append(int(token[i]))
+                    metrics.tokens_out += 1
+                    if len(r.out_tokens) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in requests):
+                break
+            logits, state = decode(self.params, state, token)
+            appended += 1
+            if self.runtime == "retro" and M.needs_flush(cfg, appended):
+                state = flush(state)     # the paper's async 1K-token update
+                appended = 0
+            key, sub = jax.random.split(key)
+            token = self._sample(logits, sub)
+        jax.block_until_ready(token)
+        metrics.decode_s = time.perf_counter() - t0
+        return metrics
+
+    def serve(self, requests: List[Request], batch_size: int) -> List[WaveMetrics]:
+        """Process a request queue in fixed-size waves."""
+        out = []
+        for i in range(0, len(requests), batch_size):
+            wave = requests[i:i + batch_size]
+            while len(wave) < batch_size:            # pad the last wave
+                wave.append(Request(prompt=wave[0].prompt.copy(),
+                                    max_new_tokens=wave[0].max_new_tokens))
+            out.append(self.run_wave(wave[:batch_size]))
+        return out

@@ -1,0 +1,74 @@
+"""Step-function builders lowered by the launcher / dry-run.
+
+Shapes are the assignment's contract:
+  * train_4k    -> train_step(state, batch)
+  * prefill_32k -> prefill_step(params, batch)       (builds the wave index)
+  * decode_32k / long_500k -> serve_step(params, state, token)  (1 new token)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.zones import ZonePlan, plan_zones
+from repro.models import model as M
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import make_train_step
+
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int, *, runtime: str = "retro",
+                      gen_headroom: int = 4096) -> Callable:
+    plan = plan_zones(seq_len, cfg.retro, gen_headroom) \
+        if cfg.family != "ssm" else None
+
+    def prefill_step(params, batch):
+        return M.apply_prefill(params, cfg, batch, runtime=runtime, plan=plan,
+                               gen_headroom=gen_headroom)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, seq_len: int, *, runtime: str = "retro",
+                    gen_headroom: int = 4096) -> Callable:
+    plan = plan_zones(seq_len, cfg.retro, gen_headroom) \
+        if cfg.family != "ssm" else None
+
+    def serve_step(params, state, token):
+        return M.apply_decode(params, cfg, state, token, runtime=runtime,
+                              plan=plan, seq_len=seq_len,
+                              gen_headroom=gen_headroom)
+
+    return serve_step
+
+
+def make_serve_step_split(cfg: ModelConfig, seq_len: int, *,
+                          gen_headroom: int = 4096,
+                          unroll: bool = False, mesh=None) -> Callable:
+    """Hot/cold-split retro decode (transformer families only; §Perf iter 1).
+
+    serve_step(params, cold, hot, token) -> (logits, new_hot)."""
+    from repro.models import transformer
+    assert cfg.family in ("dense", "moe", "vlm"), cfg.family
+    plan = plan_zones(seq_len, cfg.retro, gen_headroom)
+
+    def serve_step(params, cold, hot, token):
+        return transformer.decode_step_split(params, cfg, cold, hot, token,
+                                             plan=plan, unroll=unroll,
+                                             mesh=mesh)
+
+    return serve_step
+
+
+def make_step(cfg: ModelConfig, shape: InputShape, *, runtime: str = "retro",
+              opt_cfg: Optional[AdamWConfig] = None,
+              gen_headroom: int = 4096) -> Callable:
+    if shape.kind == "train":
+        return make_train_step(cfg, opt_cfg or AdamWConfig())
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape.seq_len, runtime=runtime,
+                                 gen_headroom=gen_headroom)
+    return make_serve_step(cfg, shape.seq_len, runtime=runtime,
+                           gen_headroom=gen_headroom)

@@ -1,0 +1,40 @@
+"""Pytree checkpointing (msgpack + raw npy payloads, no orbax)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}, treedef
+
+
+def save(path: str, tree, step: int = 0, meta: Dict | None = None):
+    os.makedirs(path, exist_ok=True)
+    flat, treedef = _flatten(tree)
+    np.savez(os.path.join(path, "arrays.npz"), **flat)
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, "treedef": str(treedef),
+                   "n_leaves": len(flat), "meta": meta or {}}, f)
+
+
+def restore(path: str, like) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (validates leaf count/shapes)."""
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(arrays), \
+        f"checkpoint has {len(arrays)} leaves, expected {len(leaves)}"
+    for a, l in zip(arrays, leaves):
+        assert a.shape == l.shape, (a.shape, l.shape)
+    restored = jax.tree.unflatten(
+        treedef, [jnp.asarray(a, dtype=l.dtype) for a, l in zip(arrays, leaves)])
+    return restored, meta["step"]

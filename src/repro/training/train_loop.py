@@ -1,0 +1,56 @@
+"""Train-step builder + host training loop."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_update,
+                                      init_adamw)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    """Returns train_step(state, batch) -> (state, metrics). This is the
+    function dryrun.py lowers for the train_4k shape."""
+
+    def train_step(state: TrainState, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(p, cfg, batch))(state.params)
+        params, opt, om = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, **om}
+        return TrainState(params=params, opt=opt), metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, key) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(params=params, opt=init_adamw(params))
+
+
+def train(cfg: ModelConfig, opt_cfg: AdamWConfig, data_iter, steps: int,
+          key=None, log_every: int = 10, callback=None):
+    """Single-host training loop (examples/tests scale)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    state = init_train_state(cfg, key)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history = []
+    for i in range(steps):
+        batch = next(data_iter)
+        state, metrics = step_fn(state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": i, **m})
+            if callback:
+                callback(i, m)
+    return state, history

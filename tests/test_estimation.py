@@ -1,0 +1,148 @@
+"""Property tests for the paper's accuracy-bounded attention estimation."""
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import RetroConfig
+from repro.core.attention import (DenseCache, full_attention_decode,
+                                  wave_attention_decode)
+from repro.core.wave_index import max_clusters, prefill_build
+from repro.core.zones import plan_zones
+
+RETRO = RetroConfig(avg_cluster=8, cluster_cap=16, prefill_segment=256,
+                    update_segment=128, sink=4, local=32, kmeans_iters=3)
+# capacity = segment size => provably no store overflow (exactness tests)
+RETRO_EXACT = RetroConfig(avg_cluster=8, cluster_cap=256, prefill_segment=256,
+                          update_segment=128, sink=4, local=32, kmeans_iters=3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    q=hnp.arrays(np.float32, (16,), elements=st.floats(-3, 3, width=32)),
+    keys=hnp.arrays(np.float32, (24, 16), elements=st.floats(-3, 3, width=32)),
+)
+def test_jensen_lower_bound(q, keys):
+    """exp(q·centroid) <= mean(exp(q·k)) — Eq. 3 of the paper."""
+    c = keys.mean(axis=0)
+    lhs = np.exp(np.dot(q, c))
+    rhs = np.mean(np.exp(keys @ q))
+    assert lhs <= rhs * (1 + 1e-4) + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_estimation_denominator_is_lower_bound(seed):
+    """The estimated softmax denominator never exceeds the true one (per-head),
+    so estimated attention weights are never inflated."""
+    rng = np.random.default_rng(seed)
+    n, hd = 512, 32
+    keys = rng.standard_normal((1, n, 1, hd)).astype(np.float32)
+    vals = rng.standard_normal((1, n, 1, hd)).astype(np.float32)
+    q = rng.standard_normal((hd,)).astype(np.float32)
+    M = max_clusters(n, RETRO, gen_headroom=128)
+    state = prefill_build(jnp.asarray(keys), jnp.asarray(vals), RETRO, M,
+                          dtype=jnp.float32)
+    # true denominator over clustered region
+    cl = np.asarray(state.size[0, 0])
+    active = int(state.n_clusters)
+    scores = (keys[0, :, 0] @ q) / np.sqrt(hd)
+    # estimated per-cluster mass s_i * exp(q.c_i) vs true sum of exp within
+    cent = np.asarray(state.centroid[0, 0][:active])
+    est = cl[:active] * np.exp(cent @ q / np.sqrt(hd))
+    pos = np.asarray(state.pos_store[0, 0][:active])            # (m, cap)
+    true = np.zeros(active)
+    for i in range(active):
+        p = pos[i][pos[i] >= 0]
+        # include overflowed members via size bookkeeping: stored only
+        true[i] = np.exp(scores[p]).sum()
+    stored = np.asarray(state.stored[0, 0][:active])
+    full_cluster = stored == cl[:active]
+    assert np.all(est[full_cluster] <= true[full_cluster] * (1 + 1e-4) + 1e-6)
+
+
+def _mk_state(seed=0, n=1100, hd=32, B=2, H=2, retro=RETRO):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    M = max_clusters(n, retro, gen_headroom=128)
+    state = prefill_build(k, v, retro, M, dtype=jnp.float32)
+    cache = DenseCache(jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+                       jnp.asarray(n, jnp.int32))
+    q = jnp.asarray(rng.standard_normal((B, 2 * H, hd)), jnp.float32)
+    return q, state, cache, n
+
+
+def test_exactness_full_retrieval():
+    """r = all clusters, estimation off => identical to full attention."""
+    q, state, cache, n = _mk_state(retro=RETRO_EXACT)
+    plan = plan_zones(n, RETRO_EXACT, 128)._replace(e=0)
+    plan = plan._replace(r=int(state.n_clusters))
+    out = wave_attention_decode(q, state, RETRO_EXACT, plan,
+                                use_estimation=False,
+                                overflow_correction=False)
+    ref = full_attention_decode(q, cache)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_estimation_reduces_error():
+    """Estimation zone strictly improves output fidelity at small budgets
+    (paper Fig. 19a)."""
+    q, state, cache, n = _mk_state(seed=3)
+    ref = np.asarray(full_attention_decode(q, cache))
+    plan = plan_zones(n, RETRO, 128)._replace(r=2)
+    with_est = wave_attention_decode(q, state, RETRO, plan).out
+    no_est = wave_attention_decode(q, state, RETRO, plan,
+                                   use_estimation=False).out
+    e1 = np.abs(np.asarray(with_est) - ref).max()
+    e0 = np.abs(np.asarray(no_est) - ref).max()
+    assert e1 < e0
+
+
+def test_error_monotone_in_budget():
+    """More retrieval budget => closer to full attention (on average)."""
+    q, state, cache, n = _mk_state(seed=7)
+    ref = np.asarray(full_attention_decode(q, cache))
+    errs = []
+    for r in (1, 8, 32, int(state.n_clusters)):
+        plan = plan_zones(n, RETRO, 128)._replace(r=r, e=0)
+        out = wave_attention_decode(q, state, RETRO, plan,
+                                    use_estimation=False,
+                                    overflow_correction=False).out
+        errs.append(float(np.abs(np.asarray(out) - ref).mean()))
+    assert errs[-1] < errs[0]
+    assert errs[-1] <= 1e-5
+    assert errs[2] <= errs[0] * 1.05
+
+
+def test_softcap_consistency():
+    """Softcapped wave attention with full retrieval matches softcapped full
+    attention (gemma2 path)."""
+    q, state, cache, n = _mk_state(seed=11, retro=RETRO_EXACT)
+    plan = plan_zones(n, RETRO_EXACT, 128)._replace(e=0)
+    plan = plan._replace(r=int(state.n_clusters))
+    out = wave_attention_decode(q, state, RETRO_EXACT, plan, softcap=30.0,
+                                use_estimation=False,
+                                overflow_correction=False)
+    ref = full_attention_decode(q, cache, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_sliding_window_consistency():
+    """Windowed wave attention (cluster-level window masking) matches windowed
+    full attention when retrieval covers everything."""
+    q, state, cache, n = _mk_state(seed=13, retro=RETRO_EXACT)
+    plan = plan_zones(n, RETRO_EXACT, 128)._replace(e=0)
+    plan = plan._replace(r=int(state.n_clusters))
+    w = jnp.asarray(300.0)
+    out = wave_attention_decode(q, state, RETRO_EXACT, plan, window=w,
+                                use_estimation=False,
+                                overflow_correction=False)
+    ref = full_attention_decode(q, cache, window=w)
+    np.testing.assert_allclose(np.asarray(out.out), np.asarray(ref),
+                               atol=2e-5, rtol=1e-4)

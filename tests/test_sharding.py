@@ -1,0 +1,121 @@
+"""Sharding rules: spec-tree validity for all archs + a real multi-device
+lower/compile on 8 fake CPU devices (subprocess, so the device count does not
+leak into this test process)."""
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config, input_specs
+from repro.launch import sharding as S
+from repro.models import model as M
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for rule evaluation)."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH1 = FakeMesh({"data": 16, "model": 16})
+MESH2 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _axes_valid(spec, shape, mesh):
+    assert len(spec) <= len(shape)
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        assert shape[dim] % n == 0, (spec, shape, dim, ax)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2], ids=["pod1", "pod2"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    abs_p = M.param_specs(cfg)
+    specs = S.param_pspecs(cfg, abs_p, mesh)
+    assert jax.tree.structure(specs, is_leaf=lambda x: isinstance(x, P)) \
+        == jax.tree.structure(abs_p)
+    for leaf, spec in zip(jax.tree.leaves(abs_p),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        _axes_valid(spec, leaf.shape, mesh)
+
+
+@pytest.mark.parametrize("arch", ["gemma2_2b", "kimi_k2_1t_a32b", "rwkv6_3b",
+                                  "zamba2_1p2b", "whisper_tiny"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_serve_state_specs_divisible(arch, shape_name):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    abs_s = M.serve_state_specs(cfg, shape.global_batch, shape.seq_len,
+                                runtime="retro", gen_headroom=1024)
+    specs = S.serve_state_pspecs(cfg, abs_s, MESH1, shape.global_batch)
+    for leaf, spec in zip(jax.tree.leaves(abs_s),
+                          jax.tree.leaves(specs,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        _axes_valid(spec, leaf.shape, MESH1)
+
+
+def test_batch_axes_fallback():
+    assert S.batch_axes(MESH1, 256) == ("data",)
+    assert S.batch_axes(MESH1, 1) is None
+    assert S.batch_axes(MESH2, 256) == ("pod", "data")
+    assert S.batch_axes(MESH2, 16) == ("data",)
+    assert S.batch_axes(MESH2, 3) is None
+
+
+def test_moe_expert_vs_ff_sharding():
+    kimi = get_config("kimi_k2_1t_a32b")         # 384 experts % 16 == 0
+    mix = get_config("mixtral_8x22b")            # 8 experts: d_ff fallback
+    pk = S.param_pspecs(kimi, M.param_specs(kimi), MESH1)
+    pm = S.param_pspecs(mix, M.param_specs(mix), MESH1)
+    assert pk["layers"]["moe"]["w_gate"] == P(None, "model", None, None)
+    assert pm["layers"]["moe"]["w_gate"] == P(None, None, None, "model")
+
+
+@pytest.mark.slow
+def test_multi_device_lower_compile():
+    """Real 8-device lowering of serve_step for one arch (subprocess)."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs.base import InputShape
+from repro.configs.registry import get_config, input_specs
+from repro.launch import sharding as S
+from repro.models import model as M
+from repro.serving.steps import make_serve_step
+
+cfg = get_config("gemma2_2b")
+shape = InputShape("d", 8192, 8, "decode")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+step = make_serve_step(cfg, shape.seq_len, runtime="retro", gen_headroom=1024)
+params_abs = M.param_specs(cfg)
+state_abs = M.serve_state_specs(cfg, 8, shape.seq_len, runtime="retro",
+                                gen_headroom=1024)
+batch_abs = input_specs(cfg, shape)
+with mesh:
+    p = S.to_named(S.param_pspecs(cfg, params_abs, mesh), mesh)
+    s = S.to_named(S.serve_state_pspecs(cfg, state_abs, mesh, 8), mesh)
+    t = S.to_named(S.batch_pspecs(cfg, batch_abs, mesh), mesh)
+    jt = jax.jit(step, in_shardings=(p, s, t["token"]), donate_argnums=(1,))
+    compiled = jt.lower(params_abs, state_abs, batch_abs["token"]).compile()
+print("COMPILED_OK", compiled.cost_analysis()["flops"] > 0)
+"""
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert "COMPILED_OK True" in out.stdout, out.stderr[-3000:]

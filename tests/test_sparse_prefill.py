@@ -1,0 +1,107 @@
+"""Block-sparse prefill (paper Fig. 12 compatibility path)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sparse_prefill import block_sparse_attention
+from repro.data.pipeline import clustered_keys
+from repro.models.layers import flash_attention_jnp
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand(B=1, T=512, Hq=4, Hkv=2, hd=32, seed=0):
+    ks = jax.random.split(jax.random.fold_in(KEY, seed), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, hd))
+    k = jax.random.normal(ks[1], (B, T, Hkv, hd))
+    v = jax.random.normal(ks[2], (B, T, Hkv, hd))
+    return q, k, v
+
+
+def test_exact_when_all_blocks_selected():
+    q, k, v = _rand(T=512)
+    out = block_sparse_attention(q, k, v, block=128, topk_blocks=4,
+                                 sink_blocks=0, local_blocks=0)
+    ref = flash_attention_jnp(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_exact_when_all_blocks_selected_windowed():
+    q, k, v = _rand(T=512, seed=1)
+    w = jnp.asarray(200.0)
+    out = block_sparse_attention(q, k, v, block=128, topk_blocks=4,
+                                 sink_blocks=0, local_blocks=0, window=w)
+    ref = flash_attention_jnp(q, k, v, causal=True, window=w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_softcap_exactness():
+    q, k, v = _rand(T=256, seed=2)
+    out = block_sparse_attention(q, k, v, block=128, topk_blocks=2,
+                                 sink_blocks=0, local_blocks=0, softcap=30.0)
+    ref = flash_attention_jnp(q, k, v, causal=True, softcap=30.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=1e-4)
+
+
+def test_sparse_close_on_structured_keys():
+    """On scattered-hot-span keys, top-k block selection recovers nearly the
+    dense output at ~25% of the blocks."""
+    n, hd = 2048, 32
+    keys, qv, hot = clustered_keys(n, hd, n_hot=4, seed=0)
+    rng = np.random.default_rng(1)
+    vals = rng.standard_normal((n, hd)).astype(np.float32)
+    k = jnp.asarray(keys)[None, :, None, :]
+    v = jnp.asarray(vals)[None, :, None, :]
+    q = jnp.broadcast_to(jnp.asarray(qv), (1, n, 1, hd)) * 1.0
+    dense = flash_attention_jnp(q, k, v, causal=True)
+    sparse = block_sparse_attention(q, k, v, block=128, topk_blocks=6,
+                                    sink_blocks=1, local_blocks=2)
+    rand = block_sparse_attention(q, k, v, block=128, topk_blocks=0,
+                                  sink_blocks=1, local_blocks=2)
+    # compare at the last query position (sees the full context)
+    d = np.asarray(dense)[0, -1, 0]
+    s = np.asarray(sparse)[0, -1, 0]
+    r = np.asarray(rand)[0, -1, 0]
+    rel = np.linalg.norm(s - d) / np.linalg.norm(d)
+    rel_stream = np.linalg.norm(r - d) / np.linalg.norm(d)
+    # top-k selection must beat the streaming-llm (sink+local only) floor
+    assert rel < 0.6 * rel_stream + 1e-6, (rel, rel_stream)
+    assert rel < 0.35, rel
+
+
+def test_prefill_integration_sparse_plus_wave_index():
+    """Sparse prefill composes with the wave index (paper Sec. 5.2)."""
+    import dataclasses
+
+    from repro.configs.base import AttnConfig, InputShape, ModelConfig
+    from repro.configs.registry import SMOKE_RETRO, materialize_batch
+    from repro.core.zones import plan_zones
+    from repro.models import model as M
+
+    cfg = ModelConfig(
+        arch_id="sparse-pre", family="dense", n_layers=2, d_model=64,
+        d_ff=128, vocab=256,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16),
+        dtype="float32", retro=SMOKE_RETRO, sparse_prefill_blocks=2)
+    S = 512
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = materialize_batch(cfg, InputShape("p", S, 2, "prefill"))
+    plan = plan_zones(S, cfg.retro, 256)
+    logits, state = M.apply_prefill(params, cfg, batch, runtime="retro",
+                                    plan=plan, gen_headroom=256)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, _ = M.apply_decode(params, cfg, state, tok, runtime="retro",
+                                plan=plan)
+    assert np.isfinite(np.asarray(logits2)).all()
+    # dense-prefill reference: logits should be in the same ballpark
+    cfg_d = cfg.replace(sparse_prefill_blocks=0)
+    logits_d, _ = M.apply_prefill(params, cfg_d, batch, runtime="retro",
+                                  plan=plan, gen_headroom=256)
+    corr = np.corrcoef(np.asarray(logits).ravel(),
+                       np.asarray(logits_d).ravel())[0, 1]
+    assert corr > 0.9, corr

@@ -1,0 +1,136 @@
+"""End-to-end system behaviour: the serving engine with the wave index vs the
+full-attention baseline, flush equivalence, and engine waves."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig, InputShape, ModelConfig, RetroConfig
+from repro.configs.registry import materialize_batch
+from repro.core.zones import plan_zones
+from repro.models import model as M
+from repro.serving.engine import Request, ServeEngine
+
+# capacity = prefill segment => provably overflow-free exact coverage
+RETRO_X = RetroConfig(avg_cluster=8, cluster_cap=64, prefill_segment=64,
+                      update_segment=32, sink=4, local=32,
+                      retrieval_frac=1.0, estimation_frac=0.0, kmeans_iters=3)
+
+CFG = ModelConfig(
+    arch_id="sys-tiny", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab=256, attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16),
+    dtype="float32", retro=RETRO_X)
+
+S, B = 384, 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    batch = materialize_batch(CFG, InputShape("p", S, B, "prefill"))
+    plan = plan_zones(S, CFG.retro, 256)
+
+    @partial(jax.jit, static_argnames=("runtime", "inline_flush"))
+    def decode(params, state, token, runtime="retro", inline_flush=False):
+        return M.apply_decode(params, CFG, state, token, runtime=runtime,
+                              plan=plan, inline_flush=inline_flush)
+
+    @jax.jit
+    def flush(state):
+        return M.flush_state(CFG, state, runtime="retro")
+
+    return params, batch, plan, decode, flush
+
+
+def test_retro_full_budget_matches_full_attention(setup):
+    """With retrieval covering all clusters the wave-index runtime reproduces
+    the dense-cache runtime's logits on a real model end-to-end."""
+    params, batch, plan, decode, _ = setup
+    lg_r, st_r = M.apply_prefill(params, CFG, batch, runtime="retro",
+                                 plan=plan, gen_headroom=256)
+    lg_f, st_f = M.apply_prefill(params, CFG, batch, runtime="full",
+                                 gen_headroom=256)
+    np.testing.assert_allclose(np.asarray(lg_r), np.asarray(lg_f), atol=1e-3,
+                               rtol=1e-3)
+    tok = jnp.argmax(lg_r, -1).astype(jnp.int32)
+    for _ in range(5):
+        lg_r, st_r = decode(params, st_r, tok, runtime="retro")
+        lg_f, st_f = decode(params, st_f, tok, runtime="full")
+        np.testing.assert_allclose(np.asarray(lg_r), np.asarray(lg_f),
+                                   atol=2e-3, rtol=2e-3)
+        t_r = np.argmax(np.asarray(lg_r), -1)
+        t_f = np.argmax(np.asarray(lg_f), -1)
+        np.testing.assert_array_equal(t_r, t_f)
+        tok = jnp.asarray(t_r, jnp.int32)
+
+
+def test_engine_flush_matches_inline_flush(setup):
+    """External (engine-driven) index updates == inline (in-step) updates."""
+    params, batch, plan, decode, flush = setup
+    n_steps = CFG.retro.update_segment + 4
+
+    _, st_a = M.apply_prefill(params, CFG, batch, runtime="retro", plan=plan,
+                              gen_headroom=256)
+    _, st_b = M.apply_prefill(params, CFG, batch, runtime="retro", plan=plan,
+                              gen_headroom=256)
+    tok_a = tok_b = jnp.zeros((B,), jnp.int32)
+    appended = 0
+    for i in range(n_steps):
+        lg_a, st_a = decode(params, st_a, tok_a, inline_flush=True)
+        lg_b, st_b = decode(params, st_b, tok_b, inline_flush=False)
+        appended += 1
+        if M.needs_flush(CFG, appended):
+            st_b = flush(st_b)
+            appended = 0
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                                   atol=1e-4, rtol=1e-4)
+        tok_a = jnp.argmax(lg_a, -1).astype(jnp.int32)
+        tok_b = jnp.argmax(lg_b, -1).astype(jnp.int32)
+    assert int(st_b.kv.n_clusters[0]) == int(st_a.kv.n_clusters[0])
+
+
+def test_engine_waves(setup):
+    params = setup[0]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
+                    max_new_tokens=6) for _ in range(4)]
+    metrics = eng.serve(reqs, batch_size=2)
+    assert len(metrics) == 2
+    for r in reqs:
+        assert len(r.out_tokens) == 6
+    assert all(m.decode_tps > 0 for m in metrics)
+
+
+def test_engine_runs_across_flush_boundary(setup):
+    """Generation longer than update_segment exercises the engine flush."""
+    params = setup[0]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=512)
+    rng = np.random.default_rng(1)
+    n_new = CFG.retro.update_segment + 8
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
+                    max_new_tokens=n_new) for _ in range(2)]
+    m = eng.run_wave(reqs)
+    assert m.tokens_out == 2 * n_new
+    for r in reqs:
+        assert all(0 <= t < CFG.vocab for t in r.out_tokens)
+
+
+def test_split_state_decode_matches_monolithic(setup):
+    """Hot/cold split decode (§Perf iter 1) is logits-identical."""
+    from repro.models.transformer import decode_step_split, split_state
+    params, batch, plan, decode, _ = setup
+    _, st = M.apply_prefill(params, CFG, batch, runtime="retro", plan=plan,
+                            gen_headroom=256)
+    tok = jnp.zeros((B,), jnp.int32)
+    cold, hot = split_state(st.kv)
+    split_fn = jax.jit(lambda p, c, h, t: decode_step_split(
+        p, CFG, c, h, t, plan=plan))
+    for _ in range(3):
+        lg_m, st = decode(params, st, tok, runtime="retro")
+        lg_s, hot = split_fn(params, cold, hot, tok)
+        np.testing.assert_allclose(np.asarray(lg_m), np.asarray(lg_s),
+                                   atol=1e-4, rtol=1e-4)
+        tok = jnp.argmax(lg_m, -1).astype(jnp.int32)

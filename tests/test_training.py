@@ -1,0 +1,87 @@
+"""Training substrate: optimizer properties, loss descent, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import AttnConfig, ModelConfig
+from repro.configs.registry import SMOKE_RETRO
+from repro.data.pipeline import lm_batches, needle_prompt, shard_batch
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import (AdamWConfig, adamw_update, cosine_lr,
+                                      global_norm, init_adamw)
+from repro.training.train_loop import init_train_state, train
+
+TINY = ModelConfig(
+    arch_id="tiny", family="dense", n_layers=2, d_model=64, d_ff=128,
+    vocab=256, attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=16),
+    dtype="float32", retro=SMOKE_RETRO)
+
+
+def test_loss_decreases():
+    data = lm_batches(TINY, batch=8, seq=64, seed=0)
+    _, hist = train(TINY, AdamWConfig(lr=3e-3, warmup_steps=5,
+                                      total_steps=60), data, steps=60,
+                    log_every=5)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    assert last < first - 0.5, (first, last)
+
+
+def test_cosine_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_frac=0.1)
+    assert float(cosine_lr(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(cosine_lr(cfg, jnp.asarray(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(cosine_lr(cfg, jnp.asarray(100))) == pytest.approx(0.1, abs=0.01)
+
+
+def test_grad_clip_bounds_update():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}
+    st = init_adamw(params)
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0, total_steps=1,
+                      weight_decay=0.0)
+    _, _, m = adamw_update(cfg, grads, st, params)
+    assert float(m["grad_norm"]) == pytest.approx(400.0)
+    clipped, _ = jax.tree.flatten(grads)
+    assert float(global_norm({"w": grads["w"] / 400.0})) <= 1.0 + 1e-5
+
+
+def test_checkpoint_roundtrip():
+    state = init_train_state(TINY, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, state, step=7)
+        restored, step = ckpt.restore(d, state)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_rejected():
+    state = {"w": jnp.ones((2, 2))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, state)
+        with pytest.raises(AssertionError):
+            ckpt.restore(d, {"w": jnp.ones((3, 3))})
+
+
+def test_data_determinism_and_sharding():
+    b1 = next(lm_batches(TINY, 8, 32, seed=42))
+    b2 = next(lm_batches(TINY, 8, 32, seed=42))
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["targets"][:, :-1])
+    s0 = shard_batch(b1, n_hosts=2, host_id=0)
+    s1 = shard_batch(b1, n_hosts=2, host_id=1)
+    assert s0["tokens"].shape[0] == 4
+    np.testing.assert_array_equal(
+        np.concatenate([s0["tokens"], s1["tokens"]]), b1["tokens"])
+
+
+def test_needle_prompt_structure():
+    toks, pos = needle_prompt(vocab=1024, seq=2048, n_needles=4, seed=0)
+    assert toks.shape == (2048,)
+    for i, p in enumerate(pos):
+        assert (toks[p:p + 8] == 1024 - 1 - i).all()

@@ -1,0 +1,153 @@
+"""Wave-index construction / update invariants + retrieval quality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import RetroConfig
+from repro.core.clustering import segmented_cluster, spherical_kmeans
+from repro.core.wave_index import (append_token, flush_segment, max_clusters,
+                                   maybe_flush, prefill_build, prefill_layout)
+from repro.core.zones import plan_zones
+from repro.data.pipeline import clustered_keys
+
+RETRO = RetroConfig(avg_cluster=8, cluster_cap=16, prefill_segment=256,
+                    update_segment=128, sink=4, local=32, kmeans_iters=3)
+
+
+def _build(n=1100, hd=32, B=1, H=1, seed=0):
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    M = max_clusters(n, RETRO, gen_headroom=128)
+    return prefill_build(k, v, RETRO, M, dtype=jnp.float32), k, v
+
+
+def test_prefill_accounting():
+    state, k, v = _build()
+    n = k.shape[1]
+    clustered = n - RETRO.sink - RETRO.local
+    assert int(state.size[0, 0].sum()) == clustered
+    assert int(state.stored[0, 0].sum()) <= clustered
+    assert int(state.length) == n
+    assert int(state.local_len) == RETRO.local
+    # all stored positions unique and within the clustered region
+    pos = np.asarray(state.pos_store[0, 0]).reshape(-1)
+    pos = pos[pos >= 0]
+    assert len(np.unique(pos)) == len(pos)
+    assert pos.min() >= RETRO.sink and pos.max() < n - RETRO.local
+
+
+def test_vsum_matches_members():
+    """Meta-index value sums equal the sum of member values (incl. overflow)."""
+    state, k, v = _build(n=612, seed=2)
+    n = 612
+    active = int(state.n_clusters)
+    vs = np.asarray(state.vsum[0, 0][:active])
+    pos = np.asarray(state.pos_store[0, 0][:active])
+    size = np.asarray(state.size[0, 0][:active])
+    stored = np.asarray(state.stored[0, 0][:active])
+    vals = np.asarray(v[0, :, 0])
+    full = size == stored                   # clusters without overflow
+    for i in np.where(full)[0]:
+        p = pos[i][pos[i] >= 0]
+        np.testing.assert_allclose(vs[i], vals[p].sum(0), rtol=1e-4, atol=1e-4)
+
+
+def test_centroid_is_member_mean():
+    state, k, v = _build(n=612, seed=4)
+    active = int(state.n_clusters)
+    cent = np.asarray(state.centroid[0, 0][:active])
+    pos = np.asarray(state.pos_store[0, 0][:active])
+    size = np.asarray(state.size[0, 0][:active])
+    stored = np.asarray(state.stored[0, 0][:active])
+    keys = np.asarray(k[0, :, 0])
+    for i in np.where(size == stored)[0][:20]:
+        p = pos[i][pos[i] >= 0]
+        np.testing.assert_allclose(cent[i], keys[p].mean(0), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_decode_append_and_flush():
+    state, k, v = _build()
+    n0 = int(state.n_clusters)
+    B, H, hd = 1, 1, 32
+    lbuf = RETRO.local + RETRO.update_segment
+    rng = np.random.default_rng(9)
+    for t in range(RETRO.update_segment):
+        kn = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        state = append_token(state, kn, kn)
+    assert int(state.local_len) == lbuf
+    state = flush_segment(state, RETRO)
+    assert int(state.n_clusters) == n0 + RETRO.update_segment // RETRO.avg_cluster
+    assert int(state.local_len) == RETRO.local
+    # flushed clusters carry correct positions
+    new = np.asarray(state.pos_store[0, 0][n0:int(state.n_clusters)])
+    got = np.sort(new[new >= 0])
+    n = k.shape[1]
+    expect = np.arange(n - RETRO.local, n - RETRO.local + RETRO.update_segment)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_maybe_flush_noop_when_not_full():
+    state, _, _ = _build()
+    out = maybe_flush(state, RETRO)
+    assert int(out.n_clusters) == int(state.n_clusters)
+
+
+def test_segmented_vs_global_recall():
+    """Paper Fig. 19b: segmented clustering keeps retrieval recall close to
+    global k-means on spatially-local key fields."""
+    n, hd = 2048, 32
+    keys, q, hot = clustered_keys(n, hd, n_hot=6, seed=0)
+    kj = jnp.asarray(keys)
+    scores = keys @ q
+    top100 = np.argsort(-scores)[:100]
+
+    def recall(res, r):
+        csc = np.asarray(res.centroid) @ q
+        order = np.argsort(-csc)[:r]
+        pos = np.asarray(res.pos_store)[order].reshape(-1)
+        sel = set(pos[pos >= 0].tolist())
+        return np.mean([t in sel for t in top100])
+
+    vv = jnp.asarray(np.zeros_like(keys))
+    pos = jnp.arange(n, dtype=jnp.int32)
+    seg = segmented_cluster(kj, vv, pos, 256, 8, 16, 5, True)
+    r = max(8, int(0.1 * n // 8))
+    rec_seg = recall(seg, r)
+    # global k-means (single segment)
+    glob = segmented_cluster(kj, vv, pos, n, 8, 16, 5, True)
+    rec_glob = recall(glob, r)
+    assert rec_seg >= 0.9
+    assert rec_seg >= rec_glob - 0.05      # within 5% of global (paper: <1%)
+
+
+def test_overflow_rate_is_low():
+    """cap = 2x avg keeps the store-truncation rate small (DESIGN §2)."""
+    n, hd = 2048, 32
+    keys, _, _ = clustered_keys(n, hd, n_hot=4, seed=1)
+    vv = jnp.asarray(np.zeros_like(keys))
+    pos = jnp.arange(n, dtype=jnp.int32)
+    res = segmented_cluster(jnp.asarray(keys), vv, pos, 256, 8, 16, 5, True)
+    dropped = 1.0 - int(res.stored.sum()) / int(res.size.sum())
+    assert dropped < 0.10
+
+
+def test_layout_and_padding():
+    nf, tail, m = prefill_layout(1100, RETRO)
+    assert nf == 4 and tail == 1100 - 36 - 4 * 256
+    M = max_clusters(1100, RETRO, gen_headroom=128, pad_multiple=256)
+    assert M % 256 == 0 and M >= m
+
+
+def test_kmeans_clusters_separable_data():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((4, 16)) * 4
+    pts = np.concatenate([c + 0.05 * rng.standard_normal((32, 16))
+                          for c in centers])
+    assign, cent = spherical_kmeans(jnp.asarray(pts, jnp.float32), 4, 8)
+    a = np.asarray(assign)
+    for g in range(4):
+        grp = a[g * 32:(g + 1) * 32]
+        assert len(np.unique(grp)) == 1      # each blob in one cluster
