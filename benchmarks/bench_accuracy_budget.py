@@ -31,11 +31,11 @@ def run():
     state = prefill_build(kj, vj, retro, max_clusters(n, retro, 256),
                           dtype=jnp.float32)
     cache = DenseCache(jnp.swapaxes(kj, 1, 2), jnp.swapaxes(vj, 1, 2),
-                       jnp.asarray(n, jnp.int32))
+                       jnp.full((kj.shape[0],), n, jnp.int32))
     qj = jnp.asarray(q)[None, None, :]
     ref = np.asarray(full_attention_decode(qj, cache))
 
-    m = int(state.n_clusters)
+    m = int(state.n_clusters[0])
     plan0 = plan_zones(n, retro, 256)
     for frac in (0.005, 0.018, 0.05, 0.1, 0.25):
         r = max(1, int(m * frac))

@@ -28,11 +28,11 @@ def run():
     state = prefill_build(kj, vj, retro, max_clusters(n, retro, 256),
                           dtype=jnp.float32)
     cache = DenseCache(jnp.swapaxes(kj, 1, 2), jnp.swapaxes(vj, 1, 2),
-                       jnp.asarray(n, jnp.int32))
+                       jnp.full((kj.shape[0],), n, jnp.int32))
     qj = jnp.asarray(q)[None, None, :]
     ref = np.asarray(full_attention_decode(qj, cache))
 
-    m = int(state.n_clusters)
+    m = int(state.n_clusters[0])
     r = max(1, int(m * 0.018))
     for efrac in (0.0, 0.05, 0.116, 0.232, 0.5):
         e = int(m * efrac)

@@ -19,6 +19,7 @@ def main() -> None:
         ("fig15_prefill_overhead", bench_prefill.run),
         ("fig17b_long_generation", bench_longgen.run),
         ("fig10_niah_trained_model", bench_niah.run),
+        ("ragged_continuous_serving", bench_throughput.run_ragged_continuous),
     ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
     print("name,us_per_call,derived")

@@ -29,7 +29,7 @@ def main():
     v = jnp.asarray(vals)[None, :, None, :]
     state = prefill_build(k, v, retro, max_clusters(n, retro, 256),
                           dtype=jnp.float32)
-    print(f"wave index: {int(state.n_clusters)} clusters over {n} tokens "
+    print(f"wave index: {int(state.n_clusters[0])} clusters over {n} tokens "
           f"({int(state.stored.sum())} stored, "
           f"{int(state.size.sum()) - int(state.stored.sum())} overflow)")
 
@@ -43,7 +43,7 @@ def main():
 
     # 3. Compare with full attention
     cache = DenseCache(jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
-                       jnp.asarray(n, jnp.int32))
+                       jnp.full((k.shape[0],), n, jnp.int32))
     ref = full_attention_decode(qj, cache)
     rel = float(jnp.linalg.norm(out.out - ref) / jnp.linalg.norm(ref))
 

@@ -33,12 +33,12 @@ def main():
         reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
                         max_new_tokens=new_tokens) for _ in range(2 * B)]
         t0 = time.perf_counter()
-        waves = engine.serve(reqs, batch_size=B)
+        m = engine.serve(reqs, batch_size=B)
         dt = time.perf_counter() - t0
-        tps = sum(w.decode_tps for w in waves) / len(waves)
         print(f"[{runtime:5s}] {len(reqs)} reqs x {S} ctx -> "
               f"{new_tokens} new tokens each: {dt:.1f}s total, "
-              f"decode {tps:.1f} tok/s/wave")
+              f"decode {m.decode_tps:.1f} tok/s, "
+              f"slot occupancy {m.slot_occupancy:.2f}")
 
     # --- host-offload configuration: device block cache over host KV blocks
     n_clusters, payload = 2048, 2 * 32 * 32  # K+V block of one cluster

@@ -50,12 +50,13 @@ def rank_clusters(q_group: jax.Array, state: WaveState, plan: ZonePlan,
                     state.centroid) * scale
     cs = soft_cap(cs, softcap)
     M = state.centroid.shape[2]
-    valid = jnp.arange(M) + cluster_offset < state.n_clusters
+    # per-row active range + dead clusters (size 0: ragged-padding artefacts)
+    in_range = jnp.arange(M)[None, :] + cluster_offset \
+        < state.n_clusters[:, None]                       # (B, M)
+    valid = in_range[:, None, :] & (state.size > 0)       # (B, Hkv, M)
     if window is not None:
-        q_pos = state.length - 1
-        valid = valid & (state.max_pos > q_pos - window)
-    else:
-        valid = jnp.broadcast_to(valid, state.max_pos.shape)
+        q_pos = state.length - 1                          # (B,)
+        valid = valid & (state.max_pos > q_pos[:, None, None] - window)
     cs = jnp.where(valid[:, :, None, :], cs, NEG)
     group_score = jnp.max(cs, axis=2)                     # (B, Hkv, M)
     _, idx_re = jax.lax.top_k(group_score, plan.r + plan.e)
@@ -94,7 +95,7 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     G = Hq // Hkv
     cap = retro.cluster_cap
     scale = 1.0 / math.sqrt(hd)
-    q_pos = state.length - 1
+    q_pos = state.length - 1                               # (B,) per-row
     qg = q.reshape(B, Hkv, G, hd)
 
     cs, idx_re = rank_clusters(qg, state, plan, window, softcap,
@@ -110,19 +111,21 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     sink_pos = jnp.broadcast_to(jnp.arange(retro.sink, dtype=jnp.int32),
                                 (B, Hkv, retro.sink))
     lbuf = state.local_k.shape[2]
-    l0 = state.length - state.local_len                    # abs pos of buffer[0]
-    local_pos = l0 + jnp.arange(lbuf, dtype=jnp.int32)
-    local_pos = jnp.where(jnp.arange(lbuf) < state.local_len, local_pos, -1)
-    local_pos = jnp.broadcast_to(local_pos, (B, Hkv, lbuf))
+    l0 = state.length - state.local_len                    # (B,) abs pos of buffer[0]
+    local_pos = l0[:, None] + jnp.arange(lbuf, dtype=jnp.int32)[None, :]
+    local_pos = jnp.where(jnp.arange(lbuf)[None, :] < state.local_len[:, None],
+                          local_pos, -1)                   # (B, lbuf)
+    local_pos = jnp.broadcast_to(local_pos[:, None, :], (B, Hkv, lbuf))
 
     k_exec = jnp.concatenate([state.sink_k, state.local_k, k_ret], axis=2)
     v_exec = jnp.concatenate([state.sink_v, state.local_v, v_ret], axis=2)
     p_exec = jnp.concatenate([sink_pos, local_pos, p_ret], axis=2)
 
-    # ---- validity mask over the execution buffer ---------------------------
-    ok = (p_exec >= 0) & (p_exec <= q_pos)
+    # ---- validity mask over the execution buffer (per-row q_pos) -----------
+    qp = q_pos[:, None, None]
+    ok = (p_exec >= 0) & (p_exec <= qp)
     if window is not None:
-        ok = ok & (p_exec > q_pos - window)
+        ok = ok & (p_exec > qp - window)
     if include_steady is not True:                 # traced gate (sharding)
         n_steady = retro.sink + lbuf
         is_steady = jnp.arange(p_exec.shape[2]) < n_steady
@@ -232,27 +235,42 @@ def tripartite_merge(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
 class DenseCache(NamedTuple):
     k: jax.Array            # (B, H, S_max, hd)
     v: jax.Array            # (B, H, S_max, hd)
-    length: jax.Array       # () int32
+    length: jax.Array       # (B,) int32 — valid prefix per row
 
 
 def init_dense_cache(B, H, S_max, hd, dtype=jnp.bfloat16) -> DenseCache:
     return DenseCache(jnp.zeros((B, H, S_max, hd), dtype),
                       jnp.zeros((B, H, S_max, hd), dtype),
-                      jnp.zeros((), jnp.int32))
+                      jnp.zeros((B,), jnp.int32))
 
 
-def dense_cache_append(cache: DenseCache, k_new, v_new) -> DenseCache:
-    idx = cache.length
-    return DenseCache(
-        jax.lax.dynamic_update_slice(
-            cache.k, k_new[:, :, None, :].astype(cache.k.dtype), (0, 0, idx, 0)),
-        jax.lax.dynamic_update_slice(
-            cache.v, v_new[:, :, None, :].astype(cache.v.dtype), (0, 0, idx, 0)),
-        cache.length + 1)
+def dense_cache_append(cache: DenseCache, k_new, v_new,
+                       active: Optional[jax.Array] = None) -> DenseCache:
+    """Append (B, H, hd) K/V at each row's own cursor. ``active``: optional
+    (B,) bool — inactive rows (free continuous-batching slots) are untouched.
+    Right-padded ragged prefills stay correct: appends overwrite the pad slots
+    just past each row's true length, so ``pos < length`` only ever admits
+    real tokens."""
+    def row(buf, new, idx):
+        return jax.lax.dynamic_update_slice(buf, new, (0, idx, 0))
+
+    new_k = jax.vmap(row)(cache.k, k_new[:, :, None, :].astype(cache.k.dtype),
+                          cache.length)
+    new_v = jax.vmap(row)(cache.v, v_new[:, :, None, :].astype(cache.v.dtype),
+                          cache.length)
+    step = jnp.ones_like(cache.length)
+    if active is not None:
+        act = jnp.asarray(active)
+        sel = act[:, None, None, None]
+        new_k = jnp.where(sel, new_k, cache.k)
+        new_v = jnp.where(sel, new_v, cache.v)
+        step = act.astype(cache.length.dtype)
+    return DenseCache(new_k, new_v, cache.length + step)
 
 
 def full_attention_decode(q, cache: DenseCache, *, window=None, softcap=None):
-    """q: (B, Hq, hd) vs the dense cache. Exact softmax over valid positions."""
+    """q: (B, Hq, hd) vs the dense cache. Exact softmax over valid positions
+    (per-row lengths)."""
     B, Hq, hd = q.shape
     Hkv = cache.k.shape[1]
     G = Hq // Hkv
@@ -262,10 +280,10 @@ def full_attention_decode(q, cache: DenseCache, *, window=None, softcap=None):
                    cache.k.astype(jnp.float32)) * scale
     s = soft_cap(s, softcap)
     pos = jnp.arange(cache.k.shape[2])
-    ok = pos < cache.length
+    ok = pos[None, :] < cache.length[:, None]              # (B, T)
     if window is not None:
-        ok = ok & (pos > cache.length - 1 - window)
-    s = jnp.where(ok[None, None, None, :], s, NEG)
+        ok = ok & (pos[None, :] > cache.length[:, None] - 1 - window)
+    s = jnp.where(ok[:, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
     return out.reshape(B, Hq, hd).astype(q.dtype)

@@ -44,16 +44,26 @@ def _normalize(x, eps=1e-8):
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
 
 
-def spherical_kmeans(keys: jax.Array, k: int, iters: int, centering: bool = True):
+def spherical_kmeans(keys: jax.Array, k: int, iters: int, centering: bool = True,
+                     valid=None):
     """keys: (n, hd) -> (assign (n,) int32, centroids_raw (k, hd) f32).
 
     Spherical: centroids are L2-normalized before the assignment step;
     similarity is the inner product (matches q.K attention scoring).
     Returned centroids are raw (un-normalized) means of assigned keys.
+
+    ``valid``: optional (n,) bool — invalid tokens (padding in a right-padded
+    ragged batch) carry zero weight everywhere: they never move a centroid and
+    never count toward a mean. They still receive an (irrelevant) assignment.
     """
     n, hd = keys.shape
     kf = keys.astype(jnp.float32)
-    mu = jnp.mean(kf, axis=0, keepdims=True)
+    if valid is None:
+        mu = jnp.mean(kf, axis=0, keepdims=True)
+    else:
+        w = valid.astype(jnp.float32)[:, None]            # (n, 1)
+        mu = jnp.sum(kf * w, axis=0, keepdims=True) / jnp.maximum(
+            jnp.sum(w), 1.0)
     x = kf - mu if centering else kf
 
     # deterministic strided init: every (n//k)-th (centered) key
@@ -68,6 +78,8 @@ def spherical_kmeans(keys: jax.Array, k: int, iters: int, centering: bool = True
         sim = x @ cn.T                                    # (n, k)
         assign = jnp.argmax(sim, axis=-1)
         oh = jax.nn.one_hot(assign, k, dtype=onehot_dtype)  # (n, k)
+        if valid is not None:
+            oh = oh * valid.astype(onehot_dtype)[:, None]
         counts = jnp.sum(oh, axis=0)                      # (k,)
         sums = oh.T @ x                                   # (k, hd)
         new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cent)
@@ -79,21 +91,32 @@ def spherical_kmeans(keys: jax.Array, k: int, iters: int, centering: bool = True
 
     # raw-space centroids for the estimation-zone Jensen bound
     oh = jax.nn.one_hot(assign, k, dtype=onehot_dtype)
+    if valid is not None:
+        oh = oh * valid.astype(onehot_dtype)[:, None]
     counts = jnp.sum(oh, axis=0)
     cent_raw = (oh.T @ kf) / jnp.maximum(counts[:, None], 1.0)
     return assign, cent_raw
 
 
-def build_cluster_stores(keys, values, positions, assign, k: int, cap: int) -> ClusterResult:
+def build_cluster_stores(keys, values, positions, assign, k: int, cap: int,
+                         valid=None) -> ClusterResult:
     """Scatter tokens of one segment into fixed-capacity cluster stores.
 
     keys/values: (n, hd); positions: (n,) int32; assign: (n,) int32 in [0, k).
     Tokens beyond a cluster's capacity are dropped from the store but still
     counted in centroid/vsum/size — the estimation zone covers them (DESIGN §2).
+
+    ``valid``: optional (n,) bool — invalid (padding) tokens are excluded from
+    every store and every statistic; a fully-invalid cluster ends up with
+    size 0 / max_pos -1 and is masked out of ranking and estimation.
     """
     n, hd = keys.shape
     kf = keys.astype(jnp.float32)
     vf = values.astype(jnp.float32)
+
+    if valid is not None:
+        # out-of-range assignment => zero one-hot row AND dropped scatter write
+        assign = jnp.where(valid, assign, k)
 
     oh = jax.nn.one_hot(assign, k, dtype=jnp.float32)
     size = jnp.sum(oh, axis=0).astype(jnp.int32)
@@ -119,17 +142,20 @@ def build_cluster_stores(keys, values, positions, assign, k: int, cap: int) -> C
 
 
 def cluster_segment(keys, values, positions, avg_cluster: int, cap: int,
-                    iters: int, centering: bool) -> ClusterResult:
-    """Cluster one segment: (n, hd) keys/values -> k = n // avg_cluster clusters."""
+                    iters: int, centering: bool, valid=None) -> ClusterResult:
+    """Cluster one segment: (n, hd) keys/values -> k = n // avg_cluster clusters.
+
+    ``valid``: optional (n,) bool padding mask (see build_cluster_stores)."""
     n = keys.shape[0]
     k = max(1, n // avg_cluster)
-    assign, _ = spherical_kmeans(keys, k, iters, centering)
-    return build_cluster_stores(keys, values, positions, assign, k, cap)
+    assign, _ = spherical_kmeans(keys, k, iters, centering, valid=valid)
+    return build_cluster_stores(keys, values, positions, assign, k, cap,
+                                valid=valid)
 
 
 def segmented_cluster(keys, values, positions, segment: int, avg_cluster: int,
                       cap: int, iters: int, centering: bool,
-                      serial: bool = False) -> ClusterResult:
+                      serial: bool = False, valid=None) -> ClusterResult:
     """Cluster a (n, hd) sequence segment-by-segment; n must divide by segment.
 
     Returns a ClusterResult whose leading dim is total clusters n//avg_cluster,
@@ -139,6 +165,8 @@ def segmented_cluster(keys, values, positions, segment: int, avg_cluster: int,
     identical results, but the k-means working set (similarity matrices,
     one-hots) is materialized for ONE segment at a time instead of all
     segments at once (§Perf: prefill peak-memory iteration).
+
+    ``valid``: optional (n,) bool padding mask, segmented alongside the keys.
     """
     n, hd = keys.shape
     assert n % segment == 0, (n, segment)
@@ -148,10 +176,19 @@ def segmented_cluster(keys, values, positions, segment: int, avg_cluster: int,
     ps = positions.reshape(n_seg, segment)
     fn = partial(cluster_segment, avg_cluster=avg_cluster, cap=cap,
                  iters=iters, centering=centering)
-    if serial:
-        res = jax.lax.map(lambda args: fn(*args), (ks, vs, ps))
+    if valid is None:
+        if serial:
+            res = jax.lax.map(lambda args: fn(*args), (ks, vs, ps))
+        else:
+            res = jax.vmap(fn)(ks, vs, ps)                # (n_seg, k_per_seg, ...)
     else:
-        res = jax.vmap(fn)(ks, vs, ps)                    # (n_seg, k_per_seg, ...)
+        ws = valid.reshape(n_seg, segment)
+        if serial:
+            res = jax.lax.map(lambda args: fn(*args[:3], valid=args[3]),
+                              (ks, vs, ps, ws))
+        else:
+            res = jax.vmap(lambda a, b, c, d: fn(a, b, c, valid=d))(
+                ks, vs, ps, ws)
     flat = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), res)
     return ClusterResult(*flat)
 

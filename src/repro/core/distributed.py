@@ -32,6 +32,18 @@ from repro.core.wave_index import WaveState
 from repro.core.zones import ZonePlan
 
 
+def _shard_map(body, mesh, in_specs, out_specs, axis_names):
+    """Version shim: jax >= 0.6 exposes jax.shard_map (axis_names/check_vma);
+    earlier releases ship jax.experimental.shard_map (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=axis_names,
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
+
+
 def local_plan(plan: ZonePlan, n_shards: int) -> ZonePlan:
     return plan._replace(r=max(1, math.ceil(plan.r / n_shards)),
                          e=max(1, math.ceil(plan.e / n_shards)))
@@ -49,7 +61,9 @@ def shard_wave_attention(q, state: WaveState, retro: RetroConfig,
     PartitionId op that SPMD can't partition when other mesh axes stay auto.
     """
     B, Hq, hd = q.shape
-    n_sh = jax.lax.axis_size(axis)
+    # jax >= 0.6 has lax.axis_size; older releases statically fold psum(1, ax)
+    n_sh = jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size") \
+        else jax.lax.psum(1, axis)
     ax = shard_id[0] if shard_id is not None else jax.lax.axis_index(axis)
     m_loc = state.centroid.shape[2]
     lp = local_plan(plan, n_sh)
@@ -102,15 +116,13 @@ def distributed_wave_attention(q, state: WaveState, retro: RetroConfig,
             return shard_wave_attention(q, s, retro, plan, axis=axis,
                                         window=w, softcap=softcap,
                                         shard_id=sid)
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(P(), state_specs, P(axis), P()),
-                           out_specs=P(), axis_names=manual, check_vma=False)
+        fn = _shard_map(body, mesh, (P(), state_specs, P(axis), P()),
+                        P(), manual)
         return fn(q, state, shard_ids, jnp.asarray(window, jnp.float32))
 
     def body(q, s, sid):
         return shard_wave_attention(q, s, retro, plan, axis=axis,
                                     window=None, softcap=softcap,
                                     shard_id=sid)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(P(), state_specs, P(axis)),
-                       out_specs=P(), axis_names=manual, check_vma=False)
+    fn = _shard_map(body, mesh, (P(), state_specs, P(axis)), P(), manual)
     return fn(q, state, shard_ids)

@@ -165,6 +165,12 @@ class WaveBuffer:
         cluster_ids, payload = cluster_ids[fresh], payload[fresh]
         if len(cluster_ids) == 0:
             return
+        # one assemble may request more unique clusters than the cache holds
+        # (tiny caches / huge retrieval zones): admit only what fits — the
+        # overflow stays host-resident and will miss again, which is correct.
+        n_cap = len(self.cache_owner)
+        if len(cluster_ids) > n_cap:
+            cluster_ids, payload = cluster_ids[:n_cap], payload[:n_cap]
         victims = self._victims(len(cluster_ids))
         evicted = self.cache_owner[victims]
         live = evicted >= 0

@@ -9,12 +9,15 @@ Per attention layer the index state holds, for every (batch, kv_head):
   as the staging area for decode-time segmented clustering (flushed into new
   clusters every ``update_segment`` generated tokens).
 
-All shapes are static; the active cluster count is a traced scalar.
+All shapes are static. Sequence bookkeeping (``length``, ``local_len``,
+``n_clusters``) is PER ROW — (B,) arrays — so a single state can hold ragged
+requests at different positions, admitted and flushed independently
+(continuous batching). Batch-uniform callers simply see every row agree.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,13 +37,13 @@ class WaveState(NamedTuple):
     size: jax.Array         # (B, H, M) int32  — meta index
     stored: jax.Array       # (B, H, M) int32
     max_pos: jax.Array      # (B, H, M) int32
-    n_clusters: jax.Array   # () int32 — active clusters
+    n_clusters: jax.Array   # (B,) int32 — active clusters per row
     sink_k: jax.Array       # (B, H, sink, hd)
     sink_v: jax.Array       # (B, H, sink, hd)
     local_k: jax.Array      # (B, H, Lbuf, hd) ring/staging buffer
     local_v: jax.Array      # (B, H, Lbuf, hd)
-    local_len: jax.Array    # () int32 — valid tail of the local buffer
-    length: jax.Array       # () int32 — total tokens seen
+    local_len: jax.Array    # (B,) int32 — valid tail of the local buffer
+    length: jax.Array       # (B,) int32 — total tokens seen per row
 
 
 def local_buffer_size(retro: RetroConfig) -> int:
@@ -51,9 +54,11 @@ def prefill_layout(seq_len: int, retro: RetroConfig) -> Tuple[int, int, int]:
     """(n_full_segments, tail_len, n_prefill_clusters) for a prompt of seq_len.
 
     Clustered region = [sink, seq_len - local); full segments of
-    ``prefill_segment`` plus one partial tail segment.
+    ``prefill_segment`` plus one partial tail segment. Prompts shorter than
+    sink + local have an empty clustered region (steady-zone-only plan) —
+    the region is clamped to >= 0 so counts never go negative.
     """
-    region = seq_len - retro.sink - retro.local
+    region = max(0, seq_len - retro.sink - retro.local)
     n_full = region // retro.prefill_segment
     tail = region - n_full * retro.prefill_segment
     m = n_full * (retro.prefill_segment // retro.avg_cluster)
@@ -70,7 +75,7 @@ def max_clusters(seq_len: int, retro: RetroConfig, gen_headroom: int = 4096,
     _, _, m = prefill_layout(seq_len, retro)
     m = m + (gen_headroom // retro.update_segment) * (
         retro.update_segment // retro.avg_cluster)
-    return ((m + pad_multiple - 1) // pad_multiple) * pad_multiple
+    return max(pad_multiple, ((m + pad_multiple - 1) // pad_multiple) * pad_multiple)
 
 
 def init_wave_state(B: int, H: int, hd: int, M: int, retro: RetroConfig,
@@ -83,21 +88,28 @@ def init_wave_state(B: int, H: int, hd: int, M: int, retro: RetroConfig,
         centroid=z((B, H, M, hd), jnp.float32), vsum=z((B, H, M, hd), jnp.float32),
         size=z((B, H, M), jnp.int32), stored=z((B, H, M), jnp.int32),
         max_pos=jnp.full((B, H, M), -1, jnp.int32),
-        n_clusters=jnp.zeros((), jnp.int32),
+        n_clusters=jnp.zeros((B,), jnp.int32),
         sink_k=z((B, H, sink, hd), dtype), sink_v=z((B, H, sink, hd), dtype),
         local_k=z((B, H, lbuf, hd), dtype), local_v=z((B, H, lbuf, hd), dtype),
-        local_len=jnp.zeros((), jnp.int32), length=jnp.zeros((), jnp.int32),
+        local_len=jnp.zeros((B,), jnp.int32), length=jnp.zeros((B,), jnp.int32),
     )
 
 
 def _write_clusters(state: WaveState, res: ClusterResult, offset) -> WaveState:
     """Write a block of freshly clustered segments at cluster ``offset``.
 
-    res leaves have leading (B, H, k_new, ...); offset may be traced.
+    res leaves have leading (B, H, k_new, ...); offset is per-row (B,) (a
+    scalar broadcasts) and may be traced — rows at different fill levels
+    receive their new clusters at different slots.
     """
+    B = state.size.shape[0]
+    off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
+
     def upd(store, new):
-        start = (0, 0, offset) + (0,) * (new.ndim - 3)
-        return jax.lax.dynamic_update_slice(store, new.astype(store.dtype), start)
+        def row(sb, nb, ob):
+            start = (0, ob) + (0,) * (nb.ndim - 2)
+            return jax.lax.dynamic_update_slice(sb, nb.astype(sb.dtype), start)
+        return jax.vmap(row)(store, new, off)
 
     return state._replace(
         k_store=upd(state.k_store, res.k_store),
@@ -113,98 +125,185 @@ def _write_clusters(state: WaveState, res: ClusterResult, offset) -> WaveState:
 
 
 def prefill_build(k: jax.Array, v: jax.Array, retro: RetroConfig, M: int,
-                  dtype=None) -> WaveState:
+                  dtype=None, lengths: Optional[jax.Array] = None) -> WaveState:
     """Build the wave index from prefill K/V.
 
     k, v: (B, S, H, hd) post-RoPE. Returns a WaveState with the prompt's
     sink/local/steady zones populated and all segments clustered.
+
+    ``lengths``: optional (B,) int32 true prompt lengths for right-padded
+    ragged batches (each row's real tokens occupy [0, lengths[b])). Each row's
+    local window is its last ``local`` REAL tokens and only tokens in
+    [sink, lengths[b] - local) enter clusters — padding never reaches a store,
+    so it can never leak into attention as generation extends past it.
+    Requires lengths[b] >= sink + local. None = every row uses all S tokens.
     """
     B, S, H, hd = k.shape
     dtype = dtype or k.dtype
-    retro_sink, local = retro.sink, retro.local
+    retro_sink = retro.sink
+    # S <= sink would under-fill the fixed-width sink zone, whose positions
+    # are implicit (arange(sink)): the empty slots' zero keys would become
+    # attendable once generation pushes length past them.
+    if S <= retro_sink:
+        raise ValueError(
+            f"prompt length {S} must exceed the sink width {retro_sink}")
+    local = min(retro.local, max(S - retro_sink, 0))
     n_full, tail, _ = prefill_layout(S, retro)
     state = init_wave_state(B, H, hd, M, retro, dtype)
 
     kbh = jnp.swapaxes(k, 1, 2)                            # (B, H, S, hd)
     vbh = jnp.swapaxes(v, 1, 2)
+
+    if lengths is None:
+        lens = jnp.full((B,), S, jnp.int32)
+        valid = None
+    else:
+        lens = jnp.asarray(lengths, jnp.int32)
+        # cluster-valid tokens: [sink, lens - local) per row
+        valid = jnp.arange(S)[None, :] < (lens - local)[:, None]
+
+    # per-row local window: the last ``local`` real tokens [lens-local, lens)
+    win0 = jnp.maximum(lens - local, 0)
+
+    def take_local(xb, s):
+        return jax.lax.dynamic_slice(xb, (0, s, 0), (H, local, hd))
+
+    lk = jax.vmap(take_local)(kbh, win0).astype(state.local_k.dtype)
+    lv = jax.vmap(take_local)(vbh, win0).astype(state.local_v.dtype)
+
     state = state._replace(
-        sink_k=kbh[:, :, :retro_sink], sink_v=vbh[:, :, :retro_sink],
-        local_k=jax.lax.dynamic_update_slice(
-            state.local_k, kbh[:, :, S - local:], (0, 0, 0, 0)),
-        local_v=jax.lax.dynamic_update_slice(
-            state.local_v, vbh[:, :, S - local:], (0, 0, 0, 0)),
-        local_len=jnp.asarray(local, jnp.int32),
-        length=jnp.asarray(S, jnp.int32),
+        sink_k=kbh[:, :, :retro_sink].astype(state.sink_k.dtype),
+        sink_v=vbh[:, :, :retro_sink].astype(state.sink_v.dtype),
+        local_k=jax.lax.dynamic_update_slice(state.local_k, lk, (0, 0, 0, 0)),
+        local_v=jax.lax.dynamic_update_slice(state.local_v, lv, (0, 0, 0, 0)),
+        local_len=jnp.full((B,), local, jnp.int32),
+        length=lens,
     )
 
     pos = jnp.arange(S, dtype=jnp.int32)
     seg = retro.prefill_segment
 
-    def bh_full(kk, vv):
-        s0 = retro_sink
-        return segmented_cluster(kk[s0:s0 + n_full * seg], vv[s0:s0 + n_full * seg],
-                                 pos[s0:s0 + n_full * seg], seg, retro.avg_cluster,
-                                 retro.cluster_cap, retro.kmeans_iters, retro.centering,
-                                 serial=retro.serial_prefill_segments)
-
     if n_full > 0:
-        res = jax.vmap(jax.vmap(bh_full))(kbh, vbh)
+        s0, span = retro_sink, n_full * seg
+
+        def row_full(kk, vv, vm):
+            def bh(k1, v1):
+                return segmented_cluster(
+                    k1[s0:s0 + span], v1[s0:s0 + span], pos[s0:s0 + span],
+                    seg, retro.avg_cluster, retro.cluster_cap,
+                    retro.kmeans_iters, retro.centering,
+                    serial=retro.serial_prefill_segments, valid=vm)
+            return jax.vmap(bh)(kk, vv)
+
+        if valid is None:
+            res = jax.vmap(partial(row_full, vm=None))(kbh, vbh)
+        else:
+            res = jax.vmap(row_full)(kbh, vbh, valid[:, s0:s0 + span])
         state = _write_clusters(state, res, 0)
 
     if tail > 0:
         t0 = retro_sink + n_full * seg
 
-        def bh_tail(kk, vv):
-            return cluster_segment(kk[t0:t0 + tail], vv[t0:t0 + tail],
-                                   pos[t0:t0 + tail], retro.avg_cluster,
-                                   retro.cluster_cap, retro.kmeans_iters,
-                                   retro.centering)
+        def row_tail(kk, vv, vm):
+            def bh(k1, v1):
+                return cluster_segment(k1[t0:t0 + tail], v1[t0:t0 + tail],
+                                       pos[t0:t0 + tail], retro.avg_cluster,
+                                       retro.cluster_cap, retro.kmeans_iters,
+                                       retro.centering, valid=vm)
+            return jax.vmap(bh)(kk, vv)
 
-        res_t = jax.vmap(jax.vmap(bh_tail))(kbh, vbh)
+        if valid is None:
+            res_t = jax.vmap(partial(row_tail, vm=None))(kbh, vbh)
+        else:
+            res_t = jax.vmap(row_tail)(kbh, vbh, valid[:, t0:t0 + tail])
         state = _write_clusters(state, res_t, state.n_clusters)
 
     return state
 
 
-def append_token(state: WaveState, k_new: jax.Array, v_new: jax.Array) -> WaveState:
-    """Append one generated token's (B, H, hd) K/V to the local buffer."""
-    idx = state.local_len
+def append_token(state: WaveState, k_new: jax.Array, v_new: jax.Array,
+                 active: Optional[jax.Array] = None) -> WaveState:
+    """Append one generated token's (B, H, hd) K/V to the local buffer.
+
+    Rows write at their own ``local_len`` cursor. ``active``: optional (B,)
+    bool — inactive rows (free slots in a continuous batch) are left
+    untouched so their counters never drift or overflow the staging buffer.
+    """
     k_new = k_new[:, :, None, :].astype(state.local_k.dtype)
     v_new = v_new[:, :, None, :].astype(state.local_v.dtype)
+
+    def row(buf, new, idx):
+        return jax.lax.dynamic_update_slice(buf, new, (0, idx, 0))
+
+    new_lk = jax.vmap(row)(state.local_k, k_new, state.local_len)
+    new_lv = jax.vmap(row)(state.local_v, v_new, state.local_len)
+    step = jnp.ones_like(state.local_len)
+    if active is not None:
+        act = jnp.asarray(active)
+        sel = act[:, None, None, None]
+        new_lk = jnp.where(sel, new_lk, state.local_k)
+        new_lv = jnp.where(sel, new_lv, state.local_v)
+        step = act.astype(state.local_len.dtype)
     return state._replace(
-        local_k=jax.lax.dynamic_update_slice(state.local_k, k_new, (0, 0, idx, 0)),
-        local_v=jax.lax.dynamic_update_slice(state.local_v, v_new, (0, 0, idx, 0)),
-        local_len=state.local_len + 1,
-        length=state.length + 1,
+        local_k=new_lk, local_v=new_lv,
+        local_len=state.local_len + step,
+        length=state.length + step,
     )
 
 
-def flush_segment(state: WaveState, retro: RetroConfig) -> WaveState:
-    """Cluster the oldest ``update_segment`` tokens of a full local buffer into
-    new clusters (paper: decode-time index update, every 1K tokens) and slide
-    the remaining ``local`` tokens to the front.
+def flush_segment(state: WaveState, retro: RetroConfig,
+                  rows: Optional[jax.Array] = None) -> WaveState:
+    """Cluster the oldest ``update_segment`` tokens of each FULL local buffer
+    into new clusters (paper: decode-time index update, every 1K tokens) and
+    slide the remaining ``local`` tokens to the front.
+
+    Per-row masked: under continuous batching rows fill their staging buffers
+    at different steps, so only rows selected by ``rows`` (default: buffer
+    full) are flushed; the rest pass through bit-unchanged.
     """
-    useg, local = retro.update_segment, retro.local
+    useg = retro.update_segment
     lbuf = local_buffer_size(retro)
     B, H, _, hd = state.local_k.shape
+    if rows is None:
+        rows = state.local_len >= lbuf
+    rows = jnp.asarray(rows)
     start = state.length - state.local_len                 # abs pos of buffer[0]
-    pos = (start + jnp.arange(useg, dtype=jnp.int32))
+    pos = start[:, None] + jnp.arange(useg, dtype=jnp.int32)[None, :]
 
-    def bh(kk, vv):
-        return cluster_segment(kk[:useg], vv[:useg], pos, retro.avg_cluster,
-                               retro.cluster_cap, retro.kmeans_iters, retro.centering)
+    def row_fn(kk, vv, p):
+        def bh(k1, v1):
+            return cluster_segment(k1[:useg], v1[:useg], p, retro.avg_cluster,
+                                   retro.cluster_cap, retro.kmeans_iters,
+                                   retro.centering)
+        return jax.vmap(bh)(kk, vv)
 
-    res = jax.vmap(jax.vmap(bh))(state.local_k, state.local_v)
-    state = _write_clusters(state, res, state.n_clusters)
+    res = jax.vmap(row_fn)(state.local_k, state.local_v, pos)
+    flushed = _write_clusters(state, res, state.n_clusters)
 
-    # slide the local window to the front of the staging buffer
     rolled_k = jnp.roll(state.local_k, -useg, axis=2)
     rolled_v = jnp.roll(state.local_v, -useg, axis=2)
-    return state._replace(local_k=rolled_k, local_v=rolled_v,
-                          local_len=state.local_len - useg)
+
+    def sel(new, old):
+        return jnp.where(rows.reshape((B,) + (1,) * (new.ndim - 1)), new, old)
+
+    return state._replace(
+        k_store=sel(flushed.k_store, state.k_store),
+        v_store=sel(flushed.v_store, state.v_store),
+        pos_store=sel(flushed.pos_store, state.pos_store),
+        centroid=sel(flushed.centroid, state.centroid),
+        vsum=sel(flushed.vsum, state.vsum),
+        size=sel(flushed.size, state.size),
+        stored=sel(flushed.stored, state.stored),
+        max_pos=sel(flushed.max_pos, state.max_pos),
+        n_clusters=jnp.where(rows, flushed.n_clusters, state.n_clusters),
+        local_k=sel(rolled_k, state.local_k),
+        local_v=sel(rolled_v, state.local_v),
+        local_len=jnp.where(rows, state.local_len - useg, state.local_len),
+    )
 
 
 def maybe_flush(state: WaveState, retro: RetroConfig) -> WaveState:
-    """Flush inside jit iff the staging buffer is full."""
+    """Flush inside jit iff any row's staging buffer is full (per-row masked)."""
     full = state.local_len >= local_buffer_size(retro)
-    return jax.lax.cond(full, lambda s: flush_segment(s, retro), lambda s: s, state)
+    return jax.lax.cond(jnp.any(full),
+                        lambda s: flush_segment(s, retro), lambda s: s, state)

@@ -26,6 +26,9 @@ class ZonePlan(NamedTuple):
 
 
 def plan_zones(seq_len: int, retro: RetroConfig, gen_headroom: int = 4096) -> ZonePlan:
+    """Prompts shorter than sink + local degrade to a steady-zone-only plan:
+    prefill_layout clamps the clustered region to zero, so r = e = 0 and the
+    cluster store keeps only decode-flush headroom."""
     _, _, m_prefill = prefill_layout(seq_len, retro)
     m_max = max_clusters(seq_len, retro, gen_headroom)
     r = min(retro.r_clusters(seq_len), m_prefill)

@@ -50,9 +50,9 @@ def _state_shardings(cfg, mesh, B, M, layout: str):
     fields = {
         "k_store": (5, 2), "v_store": (5, 2), "pos_store": (4, 2),
         "centroid": (4, 2), "vsum": (4, 2), "size": (3, 2), "stored": (3, 2),
-        "max_pos": (3, 2), "n_clusters": (0, None), "sink_k": (4, None),
+        "max_pos": (3, 2), "n_clusters": (1, None), "sink_k": (4, None),
         "sink_v": (4, None), "local_k": (4, None), "local_v": (4, None),
-        "local_len": (0, None), "length": (0, None),
+        "local_len": (1, None), "length": (1, None),
     }
     return WaveState(**{f: (spec(f, nd, md) if nd else
                             NamedSharding(mesh, P()))

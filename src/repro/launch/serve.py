@@ -1,7 +1,12 @@
-"""Serving launcher: batched-request demo with the wave-index runtime.
+"""Serving launcher: continuous-batching demo with the wave-index runtime.
+
+Ragged prompt lengths and staggered generation lengths exercise the slot
+scheduler: finished requests free their slot mid-stream and queued requests
+are admitted by per-slot prefill.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --reduced \
-        --requests 4 --batch 2 --prompt-len 640 --new-tokens 16
+        --requests 6 --batch 2 --prompt-lens 640,512,700 --new-tokens 16 \
+        --stagger 8
 """
 from __future__ import annotations
 
@@ -22,22 +27,33 @@ def main():
     ap.add_argument("--runtime", default="retro", choices=["retro", "full"])
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=640)
+    ap.add_argument("--prompt-lens", default="640",
+                    help="comma-separated lengths, cycled over the queue")
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=0,
+                    help="request i generates new-tokens + i*stagger tokens")
+    ap.add_argument("--prefill-bucket", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(cfg, params, runtime=args.runtime, gen_headroom=512)
+    lens = [int(x) for x in args.prompt_lens.split(",")]
+    engine = ServeEngine(cfg, params, runtime=args.runtime, gen_headroom=512,
+                         prefill_bucket=args.prefill_bucket)
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, args.prompt_len)
-                    .astype(np.int32), max_new_tokens=args.new_tokens)
-            for _ in range(args.requests)]
-    metrics = engine.serve(reqs, batch_size=args.batch)
-    for i, m in enumerate(metrics):
-        print(f"wave {i}: prefill {m.prefill_s:.2f}s, "
-              f"decode {m.tokens_out} tokens @ {m.decode_tps:.1f} tok/s")
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, lens[i % len(lens)])
+                    .astype(np.int32),
+                    max_new_tokens=args.new_tokens + i * args.stagger)
+            for i in range(args.requests)]
+    m = engine.serve(reqs, batch_size=args.batch)
+    print(f"served {len(reqs)} requests on {args.batch} slots "
+          f"({args.runtime}): prefill {m.prefill_s:.2f}s, "
+          f"decode {m.tokens_out} tokens @ {m.decode_tps:.1f} tok/s, "
+          f"slot occupancy {m.slot_occupancy:.2f}")
+    for i, r in enumerate(reqs):
+        print(f"  req {i}: prompt {len(r.prompt)}, out {len(r.out_tokens)}, "
+              f"ttft {r.ttft_s:.2f}s, decode {r.decode_tps:.1f} tok/s")
     print("sample output tokens:", reqs[0].out_tokens[:10])
 
 

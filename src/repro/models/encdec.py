@@ -135,11 +135,12 @@ def forward(params, cfg: ModelConfig, tokens, frames):
 
 
 def prefill(params, cfg: ModelConfig, tokens, frames, *, runtime="retro",
-            plan: ZonePlan = None, gen_headroom: int = 4096):
+            plan: ZonePlan = None, gen_headroom: int = 4096, cache_len=None):
     a, retro = cfg.attn, cfg.retro
     B, T = tokens.shape
     if plan is None:
         plan = plan_zones(T, retro, gen_headroom)
+    total = cache_len if cache_len is not None else T + gen_headroom
     enc_out = encode(params, cfg, frames)
     ck, cv = _cross_kv(params, cfg, enc_out)
     x = params["embed"][tokens] * math.sqrt(cfg.d_model)
@@ -162,11 +163,11 @@ def prefill(params, cfg: ModelConfig, tokens, frames, *, runtime="retro",
             st = prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg))
         else:
             st = wa.DenseCache(
-                jnp.swapaxes(jnp.pad(k, ((0, 0), (0, gen_headroom),
+                jnp.swapaxes(jnp.pad(k, ((0, 0), (0, total - T),
                                          (0, 0), (0, 0))), 1, 2),
-                jnp.swapaxes(jnp.pad(v, ((0, 0), (0, gen_headroom),
+                jnp.swapaxes(jnp.pad(v, ((0, 0), (0, total - T),
                                          (0, 0), (0, 0))), 1, 2),
-                jnp.asarray(T, jnp.int32))
+                jnp.full((B,), T, jnp.int32))
         return x, st
 
     x, kv = jax.lax.scan(layer_fn, x, (params["dec_layers"], ck, cv))
@@ -176,26 +177,27 @@ def prefill(params, cfg: ModelConfig, tokens, frames, *, runtime="retro",
 
 
 def decode_step(params, cfg: ModelConfig, state: EncDecServeState, token, *,
-                runtime="retro", plan: ZonePlan, inline_flush: bool = False):
+                runtime="retro", plan: ZonePlan, inline_flush: bool = False,
+                active=None):
     a, retro = cfg.attn, cfg.retro
     x = params["embed"][token] * math.sqrt(cfg.d_model)
     B = x.shape[0]
 
     def layer_fn(x, xs):
         lp, lstate, k_x, v_x = xs
-        pos = lstate.length
+        pos = lstate.length                                  # (B,) per-row
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = L.attention_qkv(lp["attn"], h[:, None, :], a.n_heads,
                                   a.n_kv_heads, a.head_dim,
-                                  jnp.asarray(pos)[None], a.rope_theta)
+                                  pos[:, None], a.rope_theta)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         if runtime == "retro":
-            lstate = append_token(lstate, k, v)
+            lstate = append_token(lstate, k, v, active=active)
             o = wa.wave_attention_decode(q, lstate, retro, plan).out
             if inline_flush:
                 lstate = maybe_flush(lstate, retro)
         else:
-            lstate = wa.dense_cache_append(lstate, k, v)
+            lstate = wa.dense_cache_append(lstate, k, v, active=active)
             o = wa.full_attention_decode(q, lstate)
         x = x + o.reshape(B, -1) @ lp["attn"]["wo"]
         h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
@@ -214,7 +216,8 @@ def decode_step(params, cfg: ModelConfig, state: EncDecServeState, token, *,
 
 
 def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
-                     runtime="retro", gen_headroom: int = 4096):
+                     runtime="retro", gen_headroom: int = 4096,
+                     zero_fill: bool = False):
     a, retro = cfg.attn, cfg.retro
     plan = plan_zones(seq_len, retro, gen_headroom)
     F = cfg.encoder_frames
@@ -223,15 +226,18 @@ def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
         if runtime == "retro":
             st = init_wave_state(B, a.n_kv_heads, a.head_dim, plan.m_max,
                                  retro, _dtype(cfg))
-            return st._replace(length=jnp.asarray(seq_len, jnp.int32),
-                               local_len=jnp.asarray(retro.local, jnp.int32),
-                               n_clusters=jnp.asarray(plan.m_max, jnp.int32))
+            if not zero_fill:
+                st = st._replace(
+                    length=jnp.full((B,), seq_len, jnp.int32),
+                    local_len=jnp.full((B,), retro.local, jnp.int32),
+                    n_clusters=jnp.full((B,), plan.m_max, jnp.int32))
+            return st
         return wa.DenseCache(
             jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
                       _dtype(cfg)),
             jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
                       _dtype(cfg)),
-            jnp.asarray(seq_len, jnp.int32))
+            jnp.full((B,), 0 if zero_fill else seq_len, jnp.int32))
 
     kv = jax.vmap(one)(jnp.arange(cfg.n_layers))
     L_ = cfg.n_layers

@@ -112,11 +112,13 @@ class HybridServeState(NamedTuple):
 
 
 def prefill(params, cfg: ModelConfig, tokens, *, runtime: str = "retro",
-            plan: ZonePlan = None, gen_headroom: int = 4096):
+            plan: ZonePlan = None, gen_headroom: int = 4096,
+            cache_len=None):
     B, T = tokens.shape
     retro = cfg.retro
     if plan is None:
         plan = plan_zones(T, retro, gen_headroom)
+    total = cache_len if cache_len is not None else T + gen_headroom
     x = params["embed"][tokens] * math.sqrt(cfg.d_model)
     positions = jnp.arange(T)
     grouped, tail, G, n_groups, rem = _group_params(params, cfg)
@@ -125,11 +127,11 @@ def prefill(params, cfg: ModelConfig, tokens, *, runtime: str = "retro",
         if runtime == "retro":
             return prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg))
         return wa.DenseCache(
-            jnp.swapaxes(jnp.pad(k, ((0, 0), (0, gen_headroom),
+            jnp.swapaxes(jnp.pad(k, ((0, 0), (0, total - T),
                                      (0, 0), (0, 0))), 1, 2),
-            jnp.swapaxes(jnp.pad(v, ((0, 0), (0, gen_headroom),
+            jnp.swapaxes(jnp.pad(v, ((0, 0), (0, total - T),
                                      (0, 0), (0, 0))), 1, 2),
-            jnp.asarray(T, jnp.int32))
+            jnp.full((B,), T, jnp.int32))
 
     def group_fn(x, gp):
         def inner(x, lp):
@@ -163,7 +165,7 @@ def prefill(params, cfg: ModelConfig, tokens, *, runtime: str = "retro",
 
 def decode_step(params, cfg: ModelConfig, state: HybridServeState, token, *,
                 runtime: str = "retro", plan: ZonePlan,
-                inline_flush: bool = False):
+                inline_flush: bool = False, active=None):
     a, retro = cfg.attn, cfg.retro
     x = params["embed"][token] * math.sqrt(cfg.d_model)
     B = x.shape[0]
@@ -179,19 +181,19 @@ def decode_step(params, cfg: ModelConfig, state: HybridServeState, token, *,
             kst = jax.tree.map(lambda arr: arr[s_idx], state.attn_kv)
             sp = params["shared"]
             h = rms_norm(x, sp["ln1"], cfg.norm_eps)
-            pos = kst.length
+            pos = kst.length                                 # (B,) per-row
             q, k, v = L.attention_qkv(sp["attn"], h[:, None, :], a.n_heads,
                                       a.n_kv_heads, a.head_dim,
-                                      jnp.asarray(pos)[None], a.rope_theta)
+                                      pos[:, None], a.rope_theta)
             q, k, v = q[:, 0], k[:, 0], v[:, 0]
             if runtime == "retro":
-                kst = append_token(kst, k, v)
+                kst = append_token(kst, k, v, active=active)
                 o = wa.wave_attention_decode(q, kst, retro, plan,
                                              softcap=a.softcap).out
                 if inline_flush:
                     kst = maybe_flush(kst, retro)
             else:
-                kst = wa.dense_cache_append(kst, k, v)
+                kst = wa.dense_cache_append(kst, k, v, active=active)
                 o = wa.full_attention_decode(q, kst, softcap=a.softcap)
             x = x + o.reshape(B, -1) @ sp["attn"]["wo"]
             h = rms_norm(x, sp["ln2"], cfg.norm_eps)
@@ -217,15 +219,16 @@ def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
             st = init_wave_state(B, a.n_kv_heads, a.head_dim, plan.m_max,
                                  retro, _dtype(cfg))
             if not zero_fill:
-                st = st._replace(length=jnp.asarray(seq_len, jnp.int32),
-                                 local_len=jnp.asarray(retro.local, jnp.int32),
-                                 n_clusters=jnp.asarray(plan.m_max, jnp.int32))
+                st = st._replace(
+                    length=jnp.full((B,), seq_len, jnp.int32),
+                    local_len=jnp.full((B,), retro.local, jnp.int32),
+                    n_clusters=jnp.full((B,), plan.m_max, jnp.int32))
             return st
-        cap = seq_len + gen_headroom if not zero_fill else seq_len + gen_headroom
+        cap = seq_len + gen_headroom
         return wa.DenseCache(
             jnp.zeros((B, a.n_kv_heads, cap, a.head_dim), _dtype(cfg)),
             jnp.zeros((B, a.n_kv_heads, cap, a.head_dim), _dtype(cfg)),
-            jnp.asarray(0 if zero_fill else seq_len, jnp.int32))
+            jnp.full((B,), 0 if zero_fill else seq_len, jnp.int32))
 
     mamba = jax.vmap(lambda _: mamba2.init_layer_state(cfg, B))(
         jnp.arange(cfg.n_layers))

@@ -81,42 +81,55 @@ def lm_loss(params, cfg: ModelConfig, batch) -> jax.Array:
 
 
 def apply_prefill(params, cfg: ModelConfig, batch, *, runtime: str = "retro",
-                  plan: Optional[ZonePlan] = None, gen_headroom: int = 4096):
+                  plan: Optional[ZonePlan] = None, gen_headroom: int = 4096,
+                  lengths=None, cache_len: Optional[int] = None):
+    """``lengths``: optional (B,) true prompt lengths for right-padded ragged
+    batches (attention families only — recurrent prefills consume pads).
+    ``cache_len``: dense-cache capacity override (continuous batching)."""
     if cfg.family in ATTN_FAMILIES:
         return transformer.prefill(params, cfg, batch["tokens"],
                                    batch.get("patch_embeds"), runtime=runtime,
-                                   plan=plan, gen_headroom=gen_headroom)
+                                   plan=plan, gen_headroom=gen_headroom,
+                                   lengths=lengths, cache_len=cache_len)
+    assert lengths is None, \
+        f"ragged (right-padded) prefill unsupported for family {cfg.family}"
     if cfg.family == "ssm":
         return rwkv6.prefill(params, cfg, batch["tokens"])
     if cfg.family == "hybrid":
         return hybrid.prefill(params, cfg, batch["tokens"], runtime=runtime,
-                              plan=plan, gen_headroom=gen_headroom)
+                              plan=plan, gen_headroom=gen_headroom,
+                              cache_len=cache_len)
     if cfg.family == "audio":
         return encdec.prefill(params, cfg, batch["tokens"], batch["frames"],
                               runtime=runtime, plan=plan,
-                              gen_headroom=gen_headroom)
+                              gen_headroom=gen_headroom, cache_len=cache_len)
     raise ValueError(cfg.family)
 
 
 def apply_decode(params, cfg: ModelConfig, state, token, *,
                  runtime: str = "retro", plan: Optional[ZonePlan] = None,
                  seq_len: Optional[int] = None, gen_headroom: int = 4096,
-                 inline_flush: bool = False):
+                 inline_flush: bool = False, active=None):
+    """``active``: optional (B,) bool slot mask — inactive (free) rows of a
+    continuous batch skip their KV-state append so counters never drift."""
     if plan is None and cfg.family != "ssm":
         assert seq_len is not None, "need plan or seq_len"
         plan = plan_zones(seq_len, cfg.retro, gen_headroom)
     if cfg.family in ATTN_FAMILIES:
         return transformer.decode_step(params, cfg, state, token,
                                        runtime=runtime, plan=plan,
-                                       inline_flush=inline_flush)
+                                       inline_flush=inline_flush,
+                                       active=active)
     if cfg.family == "ssm":
         return rwkv6.decode_step(params, cfg, state, token)
     if cfg.family == "hybrid":
         return hybrid.decode_step(params, cfg, state, token, runtime=runtime,
-                                  plan=plan, inline_flush=inline_flush)
+                                  plan=plan, inline_flush=inline_flush,
+                                  active=active)
     if cfg.family == "audio":
         return encdec.decode_step(params, cfg, state, token, runtime=runtime,
-                                  plan=plan, inline_flush=inline_flush)
+                                  plan=plan, inline_flush=inline_flush,
+                                  active=active)
     raise ValueError(cfg.family)
 
 
@@ -147,18 +160,22 @@ def needs_flush(cfg: ModelConfig, appended_since_flush: int) -> bool:
 
 
 def make_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
-                     runtime: str = "retro", gen_headroom: int = 4096):
+                     runtime: str = "retro", gen_headroom: int = 4096,
+                     zero_fill: bool = False):
     if cfg.family in ATTN_FAMILIES:
         return transformer.init_serve_state(cfg, B, seq_len, runtime=runtime,
-                                            gen_headroom=gen_headroom)
+                                            gen_headroom=gen_headroom,
+                                            zero_fill=zero_fill)
     if cfg.family == "ssm":
         return rwkv6.init_serve_state(cfg, B)
     if cfg.family == "hybrid":
         return hybrid.init_serve_state(cfg, B, seq_len, runtime=runtime,
-                                       gen_headroom=gen_headroom)
+                                       gen_headroom=gen_headroom,
+                                       zero_fill=zero_fill)
     if cfg.family == "audio":
         return encdec.init_serve_state(cfg, B, seq_len, runtime=runtime,
-                                       gen_headroom=gen_headroom)
+                                       gen_headroom=gen_headroom,
+                                       zero_fill=zero_fill)
     raise ValueError(cfg.family)
 
 

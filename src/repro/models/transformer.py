@@ -141,8 +141,19 @@ class ServeState(NamedTuple):
 
 def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None, *,
             runtime: str = "retro", plan: Optional[ZonePlan] = None,
-            gen_headroom: int = 4096) -> Tuple[jax.Array, ServeState]:
-    """Process the prompt; returns (last-position logits, serve state)."""
+            gen_headroom: int = 4096, lengths: Optional[jax.Array] = None,
+            cache_len: Optional[int] = None) -> Tuple[jax.Array, ServeState]:
+    """Process the prompt; returns (last-position logits, serve state).
+
+    ``lengths``: optional (B,) int32 true prompt lengths for right-padded
+    ragged batches. Causality already keeps real queries blind to pad keys;
+    the wave index masks pads out of its stores and the returned logits are
+    taken at each row's own last real position.
+
+    ``cache_len``: total dense-cache slots (full runtime) — continuous
+    batching sizes every per-slot prefill to the engine-wide capacity so
+    states graft into the shared decode batch.
+    """
     x = embed_tokens(params, cfg, tokens, patch_embeds)
     B, T, D = x.shape
     positions = jnp.arange(T)
@@ -150,6 +161,9 @@ def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None, *,
     retro = cfg.retro
     if plan is None:
         plan = plan_zones(T, retro, gen_headroom)
+    lens = None if lengths is None else jnp.asarray(lengths, jnp.int32)
+    total = cache_len if cache_len is not None else T + gen_headroom
+    assert total >= T, (total, T)
 
     sp_blocks = cfg.sparse_prefill_blocks
     use_sparse = sp_blocks > 0 and T % 128 == 0
@@ -172,34 +186,46 @@ def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None, *,
         y, _ = _ffn(lp, h, cfg)
         x = x + y
         if runtime == "retro":
-            st = prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg))
+            st = prefill_build(k, v, retro, plan.m_max, dtype=_dtype(cfg),
+                               lengths=lens)
         else:
             st = wa.DenseCache(
                 k=jnp.swapaxes(
-                    jnp.pad(k, ((0, 0), (0, gen_headroom), (0, 0), (0, 0))), 1, 2
+                    jnp.pad(k, ((0, 0), (0, total - T), (0, 0), (0, 0))), 1, 2
                 ).astype(_dtype(cfg)),
                 v=jnp.swapaxes(
-                    jnp.pad(v, ((0, 0), (0, gen_headroom), (0, 0), (0, 0))), 1, 2
+                    jnp.pad(v, ((0, 0), (0, total - T), (0, 0), (0, 0))), 1, 2
                 ).astype(_dtype(cfg)),
-                length=jnp.asarray(T, jnp.int32))
+                length=(jnp.full((B,), T, jnp.int32) if lens is None else lens))
         return x, st
 
     x, kv = jax.lax.scan(layer_fn, x, (params["layers"], params["window"]))
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    logits = unembed(params, cfg, x[:, -1])
+    if lens is None:
+        last = x[:, -1]
+    else:
+        last = jnp.take_along_axis(
+            x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = unembed(params, cfg, last)
     return logits, ServeState(kv=kv)
 
 
 def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
                 runtime: str = "retro", plan: ZonePlan,
-                inline_flush: bool = False) -> Tuple[jax.Array, ServeState]:
+                inline_flush: bool = False,
+                active: Optional[jax.Array] = None) -> Tuple[jax.Array, ServeState]:
     """One generation step. token: (B,) int32 -> logits (B, V).
 
     ``inline_flush=False`` keeps the segmented-clustering index update OFF the
     hot path (the paper amortizes it to ~0.2% of decode latency by running it
     asynchronously every 1K tokens); the serving engine calls
     ``model.flush_state`` when the staging buffer fills. ``inline_flush=True``
-    folds it into the step (self-contained, used by some tests)."""
+    folds it into the step (self-contained, used by some tests).
+
+    ``active``: optional (B,) bool continuous-batching slot mask — rows whose
+    slot is free skip the KV append so their counters never drift; their
+    logits are computed but discarded by the scheduler. Rows are at their OWN
+    positions: RoPE uses each row's length."""
     a = cfg.attn
     retro = cfg.retro
     x = params["embed"][token] * math.sqrt(cfg.d_model)     # (B, D)
@@ -207,24 +233,21 @@ def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
 
     def layer_fn(x, xs):
         lp, lstate, window = xs
-        if runtime == "retro":
-            pos = lstate.length                              # new token position
-        else:
-            pos = lstate.length
+        pos = lstate.length                                  # (B,) new token position
         h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = L.attention_qkv(
             lp["attn"], h[:, None, :], a.n_heads, a.n_kv_heads, a.head_dim,
-            jnp.asarray(pos)[None], a.rope_theta)
+            pos[:, None], a.rope_theta)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B, H*, hd)
         if runtime == "retro":
-            lstate = append_token(lstate, k, v)
+            lstate = append_token(lstate, k, v, active=active)
             out = wa.wave_attention_decode(q, lstate, retro, plan,
                                            window=window, softcap=a.softcap)
             if inline_flush:
                 lstate = maybe_flush(lstate, retro)
             o = out.out
         else:
-            lstate = wa.dense_cache_append(lstate, k, v)
+            lstate = wa.dense_cache_append(lstate, k, v, active=active)
             o = wa.full_attention_decode(q, lstate, window=window,
                                          softcap=a.softcap)
         x = x + o.reshape(B, -1) @ lp["attn"]["wo"]
@@ -283,11 +306,11 @@ def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
     def layer_fn(x, xs):
         lp, cold_i, hot_i, window = xs
         lstate = join_state(cold_i, hot_i)
-        pos = lstate.length
+        pos = lstate.length                                  # (B,) per-row
         h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
         q, k, v = L.attention_qkv(
             lp["attn"], h[:, None, :], a.n_heads, a.n_kv_heads, a.head_dim,
-            jnp.asarray(pos)[None], a.rope_theta)
+            pos[:, None], a.rope_theta)
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         lstate = append_token(lstate, k, v)
         if mesh is not None:
@@ -329,9 +352,14 @@ def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
 
 
 def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
-                     runtime: str = "retro", gen_headroom: int = 4096) -> ServeState:
+                     runtime: str = "retro", gen_headroom: int = 4096,
+                     zero_fill: bool = False) -> ServeState:
     """Zero-initialized serve state with the same structure/shape the prefill
-    produces — used for dry-run lowering of serve_step without a real prefill."""
+    produces — used for dry-run lowering of serve_step without a real prefill.
+
+    ``zero_fill=True`` leaves every per-row counter at zero (an all-free
+    continuous-batching batch awaiting per-slot prefill grafts) instead of
+    pretending each row holds a full ``seq_len`` context."""
     a, retro = cfg.attn, cfg.retro
     plan = plan_zones(seq_len, retro, gen_headroom)
 
@@ -339,15 +367,18 @@ def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
         if runtime == "retro":
             st = init_wave_state(B, a.n_kv_heads, a.head_dim, plan.m_max,
                                  retro, _dtype(cfg))
-            return st._replace(length=jnp.asarray(seq_len, jnp.int32),
-                               local_len=jnp.asarray(retro.local, jnp.int32),
-                               n_clusters=jnp.asarray(plan.m_max, jnp.int32))
+            if not zero_fill:
+                st = st._replace(
+                    length=jnp.full((B,), seq_len, jnp.int32),
+                    local_len=jnp.full((B,), retro.local, jnp.int32),
+                    n_clusters=jnp.full((B,), plan.m_max, jnp.int32))
+            return st
         return wa.DenseCache(
             jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
                       _dtype(cfg)),
             jnp.zeros((B, a.n_kv_heads, seq_len + gen_headroom, a.head_dim),
                       _dtype(cfg)),
-            jnp.asarray(seq_len, jnp.int32))
+            jnp.full((B,), 0 if zero_fill else seq_len, jnp.int32))
 
     kv = jax.vmap(one_layer)(jnp.arange(cfg.n_layers))
     return ServeState(kv=kv)

@@ -1,13 +1,25 @@
-"""Batch-synchronous serving engine.
+"""Continuous-batching serving engine.
 
-Processes requests in waves of the configured batch size (the paper's
-throughput experiments use fixed batches per context length): prefill builds
-the wave index (or dense cache), then jit'd decode steps generate tokens.
-Tracks per-wave token throughput and, in retro mode, retrieval statistics.
+The decode loop runs a fixed number of SLOTS (the decode batch). Each slot
+holds at most one in-flight request; finished requests free their slot and
+queued requests are admitted mid-stream via a per-slot prefill whose state is
+grafted into the shared decode batch. Per-request wave-index bookkeeping
+(``length``/``local_len``/``n_clusters`` are (B,) arrays) lets ragged
+requests sit at different positions in one batch; staging-buffer flushes are
+per-row masked, so rows flush on their own schedule.
+
+Ragged prompts are right-padded to a jit bucket and masked (the wave index
+never stores a pad token; logits are read at each row's true last position),
+so a handful of compiled prefill shapes serves arbitrary traffic.
+
+Metrics are per-request (TTFT, decode tok/s) plus engine-level slot occupancy
+and aggregate throughput. Only real requests count: free slots produce
+logits that are never sampled, so padding can't inflate ``tokens_out``.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Dict, List, Optional
@@ -17,8 +29,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.wave_index import local_buffer_size
 from repro.core.zones import plan_zones
 from repro.models import model as M
+from repro.models.model import ATTN_FAMILIES
 
 
 @dataclass
@@ -27,110 +41,244 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+    extra: Optional[Dict] = None        # per-request prefill extras (e.g. vlm)
+    # ---- filled by the engine ----
+    ttft_s: float = 0.0                 # enqueue -> first token
+    decode_tps: float = 0.0             # this request's decode tokens/s
 
 
 @dataclass
-class WaveMetrics:
+class ServeMetrics:
+    """Aggregate serve metrics. Padding/free slots never contribute: only
+    sampled tokens of real requests are counted."""
     prefill_s: float = 0.0
     decode_s: float = 0.0
     tokens_out: int = 0
+    steps: int = 0                      # decode steps executed
+    occupied_slot_steps: int = 0        # sum over steps of active slots
+    n_slots: int = 0
+    ttft_s: List[float] = field(default_factory=list)
+    request_tps: List[float] = field(default_factory=list)
 
     @property
     def decode_tps(self) -> float:
         return self.tokens_out / max(self.decode_s, 1e-9)
 
+    @property
+    def slot_occupancy(self) -> float:
+        return self.occupied_slot_steps / max(self.steps * self.n_slots, 1)
+
+
+# back-compat alias (pre-continuous engines returned per-wave metrics)
+WaveMetrics = ServeMetrics
+
 
 class ServeEngine:
+    """``serve(requests, batch_size)`` — continuous scheduler over a slot
+    batch. ``max_context`` pins the decode geometry (zone plan / cluster-store
+    capacity); all requests served by one engine share it, so a request's
+    outputs are independent of what else shares the batch (a solo run at
+    batch_size=1 reproduces them token-for-token). ``prefill_bucket`` > 1
+    right-pads prompts up to a multiple, trading a masked prefill for fewer
+    compiled shapes."""
+
     def __init__(self, cfg: ModelConfig, params, *, runtime: str = "retro",
-                 gen_headroom: int = 1024, temperature: float = 0.0):
+                 gen_headroom: int = 1024, temperature: float = 0.0,
+                 max_context: Optional[int] = None, prefill_bucket: int = 1):
         self.cfg = cfg
         self.params = params
         self.runtime = runtime
         self.gen_headroom = gen_headroom
         self.temperature = temperature
-        self._prefill_jit: Dict[int, Any] = {}
-        self._decode_jit: Dict[int, Any] = {}
+        self.max_context = max_context
+        self.prefill_bucket = max(1, prefill_bucket)
+        self._prefill_jit: Dict[Any, Any] = {}
+        self._decode_jit: Dict[Any, Any] = {}
+        self._graft = jax.jit(
+            lambda big, small, slot: jax.tree.map(
+                lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), slot, axis=1), big, small),
+            donate_argnums=(0,))
+        # sample ON DEVICE: the decode loop only ever moves (B,) token ids to
+        # host, never the (B, vocab) logits (at production vocab sizes that
+        # transfer would dominate the step).
+        self._argmax = jax.jit(
+            lambda lg: jnp.argmax(lg, axis=-1).astype(jnp.int32))
+        self._categorical = jax.jit(
+            lambda key, lg, temp: jax.random.categorical(
+                key, lg / temp).astype(jnp.int32))
 
-    def _get_fns(self, seq_len: int):
-        if seq_len not in self._prefill_jit:
+    # ------------------------------------------------------------- compiled fns
+    def _bucket(self, L: int) -> int:
+        retro = self.cfg.retro
+        if self.cfg.family not in ATTN_FAMILIES:
+            return L        # recurrent prefills consume pads: compile exact
+        if L < retro.sink + retro.local:
+            return L        # too short to mask a ragged tail; compile exact
+        b = self.prefill_bucket
+        return L if b <= 1 else ((L + b - 1) // b) * b
+
+    def _prefill_fn(self, seq_len: int, max_ctx: int):
+        key = (seq_len, max_ctx)
+        if key not in self._prefill_jit:
             cfg, rt, gh = self.cfg, self.runtime, self.gen_headroom
-            plan = plan_zones(seq_len, cfg.retro, gh) \
+            plan = plan_zones(max_ctx, cfg.retro, gh) \
                 if cfg.family != "ssm" else None
+            ragged = cfg.family in ATTN_FAMILIES
 
             @jax.jit
-            def prefill(params, batch):
+            def prefill(params, batch, lengths):
                 return M.apply_prefill(params, cfg, batch, runtime=rt,
-                                       plan=plan, gen_headroom=gh)
+                                       plan=plan, gen_headroom=gh,
+                                       lengths=lengths if ragged else None,
+                                       cache_len=max_ctx + gh)
+
+            self._prefill_jit[key] = prefill
+        return self._prefill_jit[key]
+
+    def _decode_fns(self, batch_size: int, max_ctx: int):
+        key = (batch_size, max_ctx)
+        if key not in self._decode_jit:
+            cfg, rt, gh = self.cfg, self.runtime, self.gen_headroom
+            plan = plan_zones(max_ctx, cfg.retro, gh) \
+                if cfg.family != "ssm" else None
 
             @partial(jax.jit, donate_argnums=(1,))
-            def decode(params, state, token):
+            def decode(params, state, token, active):
                 return M.apply_decode(params, cfg, state, token, runtime=rt,
-                                      plan=plan, seq_len=seq_len,
-                                      gen_headroom=gh)
+                                      plan=plan, seq_len=max_ctx,
+                                      gen_headroom=gh, active=active)
 
             @partial(jax.jit, donate_argnums=(0,))
             def flush(state):
                 return M.flush_state(cfg, state, runtime=rt)
 
-            self._prefill_jit[seq_len] = prefill
-            self._decode_jit[seq_len] = (decode, flush)
-        return self._prefill_jit[seq_len], self._decode_jit[seq_len]
+            self._decode_jit[key] = (decode, flush)
+        return self._decode_jit[key]
 
-    def _sample(self, logits: jax.Array, key) -> jax.Array:
+    # ---------------------------------------------------------------- serving
+    def _sample(self, logits, key) -> np.ndarray:
+        """Device logits -> host (B,) token ids (blocks until ready)."""
         if self.temperature <= 0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            key, logits / self.temperature).astype(jnp.int32)
+            drawn = self._argmax(logits)
+        else:
+            drawn = self._categorical(key, logits,
+                                      jnp.float32(self.temperature))
+        return np.asarray(drawn).astype(np.int64)
 
-    def run_wave(self, requests: List[Request], extra_batch: Optional[Dict] = None,
-                 seed: int = 0) -> WaveMetrics:
-        """Run one batch wave to completion (all prompts same length)."""
-        cfg = self.cfg
-        S = len(requests[0].prompt)
-        assert all(len(r.prompt) == S for r in requests)
-        prefill, (decode, flush) = self._get_fns(S)
-        metrics = WaveMetrics()
-        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in requests]))}
-        if extra_batch:
-            batch.update(extra_batch)
+    def serve(self, requests: List[Request], batch_size: int,
+              seed: int = 0) -> ServeMetrics:
+        """Serve a FIFO queue through ``batch_size`` continuous slots."""
+        cfg, rt = self.cfg, self.runtime
+        assert requests
+        max_ctx = self.max_context or max(
+            self._bucket(len(r.prompt)) for r in requests)
+        min_len = cfg.retro.sink + 1 \
+            if rt == "retro" and cfg.family != "ssm" else 1
+        for r in requests:
+            if not min_len <= len(r.prompt) <= max_ctx:
+                raise ValueError(
+                    f"prompt length {len(r.prompt)} outside "
+                    f"[{min_len}, {max_ctx}]")
+        B = batch_size
+        decode, flush = self._decode_fns(B, max_ctx)
+        state = M.make_serve_state(cfg, B, max_ctx, runtime=rt,
+                                   gen_headroom=self.gen_headroom,
+                                   zero_fill=True)
+        lbuf = local_buffer_size(cfg.retro)
+        use_flush = rt == "retro" and cfg.family != "ssm"
+
+        queue = deque(requests)
+        slots: List[Optional[Request]] = [None] * B
+        active = np.zeros(B, bool)
+        tokens = np.zeros(B, np.int64)
+        staged = np.zeros(B, np.int64)      # host mirror of local_len (retro)
+        admit_t = np.zeros(B, float)
+        metrics = ServeMetrics(n_slots=B)
         key = jax.random.PRNGKey(seed)
+        t_start = time.perf_counter()
 
-        t0 = time.perf_counter()
-        logits, state = jax.block_until_ready(prefill(self.params, batch))
-        metrics.prefill_s = time.perf_counter() - t0
+        def finish(i: int, req: Request):
+            req.done = True
+            dt = time.perf_counter() - admit_t[i]
+            n_decode = len(req.out_tokens) - 1   # first token is prefill's
+            req.decode_tps = n_decode / dt if dt > 0 and n_decode > 0 else 0.0
+            metrics.request_tps.append(req.decode_tps)
+            slots[i] = None
+            active[i] = False
 
-        key, sub = jax.random.split(key)
-        token = self._sample(logits, sub)
-        max_new = max(r.max_new_tokens for r in requests)
-        t0 = time.perf_counter()
-        appended = 0
-        for step in range(max_new):
-            for i, r in enumerate(requests):
-                if not r.done:
-                    r.out_tokens.append(int(token[i]))
-                    metrics.tokens_out += 1
-                    if len(r.out_tokens) >= r.max_new_tokens:
-                        r.done = True
-            if all(r.done for r in requests):
-                break
-            logits, state = decode(self.params, state, token)
-            appended += 1
-            if self.runtime == "retro" and M.needs_flush(cfg, appended):
-                state = flush(state)     # the paper's async 1K-token update
-                appended = 0
+        while queue or active.any():
+            # ---- admission: fill free slots from the queue -----------------
+            for i in range(B):
+                if active[i] or not queue:
+                    continue
+                req = queue.popleft()
+                L = len(req.prompt)
+                S_b = min(self._bucket(L), max_ctx)
+                assert S_b >= L
+                toks = np.zeros((1, S_b), np.int32)
+                toks[0, :L] = req.prompt
+                batch = {"tokens": jnp.asarray(toks)}
+                if req.extra:
+                    batch.update(req.extra)
+                t0 = time.perf_counter()
+                prefill = self._prefill_fn(S_b, max_ctx)
+                logits, st1 = prefill(self.params, batch,
+                                      jnp.asarray([L], jnp.int32))
+                state = self._graft(state, st1, jnp.asarray(i, jnp.int32))
+                key, sub = jax.random.split(key)
+                tok = int(self._sample(logits, sub)[0])  # blocks until ready
+                metrics.prefill_s += time.perf_counter() - t0
+                req.ttft_s = time.perf_counter() - t_start
+                req.out_tokens.append(tok)
+                metrics.tokens_out += 1
+                metrics.ttft_s.append(req.ttft_s)
+                admit_t[i] = time.perf_counter()
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    finish(i, req)
+                    continue
+                slots[i] = req
+                active[i] = True
+                tokens[i] = tok
+                staged[i] = min(cfg.retro.local, max(S_b - cfg.retro.sink, 0))
+            if not active.any():
+                if not queue:
+                    break
+                continue
+
+            # ---- one decode step over the whole slot batch -----------------
+            t0 = time.perf_counter()
+            logits, state = decode(self.params, state,
+                                   jnp.asarray(tokens, jnp.int32),
+                                   jnp.asarray(active))
             key, sub = jax.random.split(key)
-            token = self._sample(logits, sub)
-        jax.block_until_ready(token)
-        metrics.decode_s = time.perf_counter() - t0
+            sampled = self._sample(logits, sub)     # blocks until ready
+            metrics.decode_s += time.perf_counter() - t0
+            metrics.steps += 1
+            metrics.occupied_slot_steps += int(active.sum())
+            staged[active] += 1
+            for i in range(B):
+                if not active[i]:
+                    continue
+                req = slots[i]
+                tok = int(sampled[i])
+                req.out_tokens.append(tok)
+                metrics.tokens_out += 1
+                tokens[i] = tok
+                if len(req.out_tokens) >= req.max_new_tokens:
+                    finish(i, req)
+
+            # ---- per-row masked index update (off the per-step hot path) ---
+            if use_flush and (staged >= lbuf).any():
+                state = flush(state)
+                staged[staged >= lbuf] -= cfg.retro.update_segment
         return metrics
 
-    def serve(self, requests: List[Request], batch_size: int) -> List[WaveMetrics]:
-        """Process a request queue in fixed-size waves."""
-        out = []
-        for i in range(0, len(requests), batch_size):
-            wave = requests[i:i + batch_size]
-            while len(wave) < batch_size:            # pad the last wave
-                wave.append(Request(prompt=wave[0].prompt.copy(),
-                                    max_new_tokens=wave[0].max_new_tokens))
-            out.append(self.run_wave(wave[:batch_size]))
-        return out
+    def run_wave(self, requests: List[Request],
+                 extra_batch: Optional[Dict] = None,
+                 seed: int = 0) -> ServeMetrics:
+        """Back-compat: serve one batch of requests with one slot each."""
+        if extra_batch:
+            for i, r in enumerate(requests):
+                r.extra = {k: v[i:i + 1] for k, v in extra_batch.items()}
+        return self.serve(requests, batch_size=len(requests), seed=seed)

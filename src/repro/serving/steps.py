@@ -36,10 +36,13 @@ def make_serve_step(cfg: ModelConfig, seq_len: int, *, runtime: str = "retro",
     plan = plan_zones(seq_len, cfg.retro, gen_headroom) \
         if cfg.family != "ssm" else None
 
-    def serve_step(params, state, token):
+    def serve_step(params, state, token, active=None):
+        """``active``: optional (B,) bool continuous-batching slot mask —
+        free slots skip their KV append so per-row counters never drift
+        while the scheduler admits/evicts around them."""
         return M.apply_decode(params, cfg, state, token, runtime=runtime,
                               plan=plan, seq_len=seq_len,
-                              gen_headroom=gen_headroom)
+                              gen_headroom=gen_headroom, active=active)
 
     return serve_step
 

@@ -84,7 +84,7 @@ v2 = jnp.asarray(vals)[None, :, None, :].repeat(B, 0).repeat(H, 2)
 st2 = prefill_build(k2, v2, RETRO, M, dtype=jnp.float32)
 q2 = jnp.asarray(qv)[None, None, :].repeat(B, 0).repeat(2 * H, 1)
 cache = DenseCache(jnp.swapaxes(k2, 1, 2), jnp.swapaxes(v2, 1, 2),
-                   jnp.asarray(n, jnp.int32))
+                   jnp.full((k2.shape[0],), n, jnp.int32))
 ref = full_attention_decode(q2, cache)
 plan_b = plan_zones(n, RETRO, 128)
 e_ser = float(jnp.linalg.norm(

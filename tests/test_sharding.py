@@ -110,12 +110,18 @@ with mesh:
     t = S.to_named(S.batch_pspecs(cfg, batch_abs, mesh), mesh)
     jt = jax.jit(step, in_shardings=(p, s, t["token"]), donate_argnums=(1,))
     compiled = jt.lower(params_abs, state_abs, batch_abs["token"]).compile()
-print("COMPILED_OK", compiled.cost_analysis()["flops"] > 0)
+cost = compiled.cost_analysis()
+if isinstance(cost, list):          # older jax returns one dict per device
+    cost = cost[0]
+print("COMPILED_OK", cost["flops"] > 0)
 """
     import os
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
-    env.pop("JAX_PLATFORMS", None)
+    # force_host_platform_device_count only multiplies CPU devices; pinning
+    # the platform also stops jax probing for a TPU (minutes of metadata
+    # timeouts on TPU-toolchain images without an attached accelerator).
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=900, env=env)
     assert "COMPILED_OK True" in out.stdout, out.stderr[-3000:]

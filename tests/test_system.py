@@ -88,20 +88,52 @@ def test_engine_flush_matches_inline_flush(setup):
                                    atol=1e-4, rtol=1e-4)
         tok_a = jnp.argmax(lg_a, -1).astype(jnp.int32)
         tok_b = jnp.argmax(lg_b, -1).astype(jnp.int32)
-    assert int(st_b.kv.n_clusters[0]) == int(st_a.kv.n_clusters[0])
+    assert int(st_b.kv.n_clusters[0, 0]) == int(st_a.kv.n_clusters[0, 0])
 
 
-def test_engine_waves(setup):
+def test_engine_continuous_queue(setup):
+    """A queue longer than the slot count drains through continuous batching;
+    only real sampled tokens are counted (no padding inflation)."""
     params = setup[0]
     eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
-                    max_new_tokens=6) for _ in range(4)]
-    metrics = eng.serve(reqs, batch_size=2)
-    assert len(metrics) == 2
+                    max_new_tokens=6) for _ in range(3)]
+    m = eng.serve(reqs, batch_size=2)
     for r in reqs:
         assert len(r.out_tokens) == 6
-    assert all(m.decode_tps > 0 for m in metrics)
+        assert r.done
+    assert m.tokens_out == 3 * 6            # odd queue: no padding slot counted
+    assert m.decode_tps > 0
+    assert m.n_slots == 2
+    assert 0 < m.slot_occupancy <= 1
+    assert len(m.ttft_s) == 3 and len(m.request_tps) == 3
+
+
+def test_continuous_matches_solo_bitwise(setup):
+    """Acceptance: a mixed queue of >= 3 distinct prompt lengths with
+    staggered max_new_tokens; every request's greedy output is bit-identical
+    to running it alone at batch size 1 (same engine geometry)."""
+    params = setup[0]
+    rng = np.random.default_rng(7)
+    lens = [S, 256, 320, 200]               # 4 distinct lengths, ragged
+    news = [20, 6, 41, 12]                  # staggered; 41 crosses a flush
+    prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32) for L in lens]
+
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S)
+    reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, news)]
+    m = eng.serve(reqs, batch_size=2)
+    assert m.tokens_out == sum(news)
+
+    solo = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                       max_context=S)
+    for p, n, served in zip(prompts, news, reqs):
+        ref = Request(prompt=p.copy(), max_new_tokens=n)
+        solo.serve([ref], batch_size=1)
+        assert ref.out_tokens == served.out_tokens, len(p)
+        assert len(served.out_tokens) == n
 
 
 def test_engine_runs_across_flush_boundary(setup):

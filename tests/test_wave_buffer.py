@@ -77,6 +77,29 @@ def test_temporal_locality_hit_ratio():
     assert buf.stats.hit_ratio > 0.75
 
 
+@pytest.mark.parametrize("policy", ("lru", "fifo", "clock"))
+def test_admit_more_uniques_than_cache(policy):
+    """One assemble requesting more unique clusters than the cache holds must
+    not crash: admission clips to capacity, owners stay unique, and the
+    mapping table stays consistent with cache_owner."""
+    buf, host = _mk(n_clusters=64, cache=8, policy=policy)
+    ids = np.arange(24)                    # 24 uniques > 8 cache slots
+    out = buf.assemble(ids)
+    np.testing.assert_array_equal(out, host[ids])
+    buf.apply_updates()                    # must not raise
+    owners = buf.cache_owner
+    live = owners[owners >= 0]
+    assert len(np.unique(live)) == len(live)            # no duplicate owner
+    for slot, cid in enumerate(owners):
+        if cid >= 0:
+            assert buf.table.cache_slot[cid] == slot    # table <-> owner
+    mapped = buf.table.cache_slot[buf.table.cache_slot >= 0]
+    assert len(mapped) == len(live)
+    # cached payloads are the right rows; reads stay correct afterwards
+    out = buf.assemble(ids)
+    np.testing.assert_array_equal(out, host[ids])
+
+
 def test_transfer_accounting():
     buf, host = _mk(n_clusters=16, cache=4, payload=32)
     per = host[0].nbytes

@@ -29,8 +29,8 @@ def test_prefill_accounting():
     clustered = n - RETRO.sink - RETRO.local
     assert int(state.size[0, 0].sum()) == clustered
     assert int(state.stored[0, 0].sum()) <= clustered
-    assert int(state.length) == n
-    assert int(state.local_len) == RETRO.local
+    assert int(state.length[0]) == n
+    assert int(state.local_len[0]) == RETRO.local
     # all stored positions unique and within the clustered region
     pos = np.asarray(state.pos_store[0, 0]).reshape(-1)
     pos = pos[pos >= 0]
@@ -42,7 +42,7 @@ def test_vsum_matches_members():
     """Meta-index value sums equal the sum of member values (incl. overflow)."""
     state, k, v = _build(n=612, seed=2)
     n = 612
-    active = int(state.n_clusters)
+    active = int(state.n_clusters[0])
     vs = np.asarray(state.vsum[0, 0][:active])
     pos = np.asarray(state.pos_store[0, 0][:active])
     size = np.asarray(state.size[0, 0][:active])
@@ -56,7 +56,7 @@ def test_vsum_matches_members():
 
 def test_centroid_is_member_mean():
     state, k, v = _build(n=612, seed=4)
-    active = int(state.n_clusters)
+    active = int(state.n_clusters[0])
     cent = np.asarray(state.centroid[0, 0][:active])
     pos = np.asarray(state.pos_store[0, 0][:active])
     size = np.asarray(state.size[0, 0][:active])
@@ -70,19 +70,19 @@ def test_centroid_is_member_mean():
 
 def test_decode_append_and_flush():
     state, k, v = _build()
-    n0 = int(state.n_clusters)
+    n0 = int(state.n_clusters[0])
     B, H, hd = 1, 1, 32
     lbuf = RETRO.local + RETRO.update_segment
     rng = np.random.default_rng(9)
     for t in range(RETRO.update_segment):
         kn = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
         state = append_token(state, kn, kn)
-    assert int(state.local_len) == lbuf
+    assert int(state.local_len[0]) == lbuf
     state = flush_segment(state, RETRO)
-    assert int(state.n_clusters) == n0 + RETRO.update_segment // RETRO.avg_cluster
-    assert int(state.local_len) == RETRO.local
+    assert int(state.n_clusters[0]) == n0 + RETRO.update_segment // RETRO.avg_cluster
+    assert int(state.local_len[0]) == RETRO.local
     # flushed clusters carry correct positions
-    new = np.asarray(state.pos_store[0, 0][n0:int(state.n_clusters)])
+    new = np.asarray(state.pos_store[0, 0][n0:int(state.n_clusters[0])])
     got = np.sort(new[new >= 0])
     n = k.shape[1]
     expect = np.arange(n - RETRO.local, n - RETRO.local + RETRO.update_segment)
@@ -92,7 +92,7 @@ def test_decode_append_and_flush():
 def test_maybe_flush_noop_when_not_full():
     state, _, _ = _build()
     out = maybe_flush(state, RETRO)
-    assert int(out.n_clusters) == int(state.n_clusters)
+    assert int(out.n_clusters[0]) == int(state.n_clusters[0])
 
 
 def test_segmented_vs_global_recall():
@@ -139,6 +139,93 @@ def test_layout_and_padding():
     assert nf == 4 and tail == 1100 - 36 - 4 * 256
     M = max_clusters(1100, RETRO, gen_headroom=128, pad_multiple=256)
     assert M % 256 == 0 and M >= m
+
+
+def test_short_prompt_layout_degenerates():
+    """Regression: prompts shorter than sink + local used to produce NEGATIVE
+    full-segment / cluster counts (floor division of a negative region). The
+    layout must clamp to a steady-zone-only plan and the zone plan / store
+    sizing must stay usable."""
+    nf, tail, m = prefill_layout(64, RetroConfig())       # sink=4, local=64
+    assert (nf, tail, m) == (0, 0, 0)
+    for s in (1, 4, 67, 68, 69):
+        nf, tail, m = prefill_layout(s, RetroConfig())
+        assert nf >= 0 and tail >= 0 and m >= 0
+    M = max_clusters(64, RetroConfig())
+    assert M > 0 and M % 256 == 0
+    plan = plan_zones(64, RetroConfig())
+    assert plan.r == 0 and plan.e == 0 and plan.m_max == M
+
+
+def test_prompt_not_longer_than_sink_rejected():
+    """S <= sink cannot fill the fixed-width sink zone (implicit arange
+    positions): the builder must refuse instead of leaving attendable
+    zero-key slots."""
+    hd = 16
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((1, RETRO.sink, 1, hd)), jnp.float32)
+    with pytest.raises(ValueError, match="sink"):
+        prefill_build(k, k, RETRO, 256, dtype=jnp.float32)
+
+
+def test_short_prompt_prefill_build():
+    """A prompt shorter than sink + local builds a steady-zone-only state:
+    no clusters, the local window covers everything past the sinks."""
+    n, hd = 20, 16
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(rng.standard_normal((1, n, 1, hd)), jnp.float32)
+    M = max_clusters(n, RETRO, gen_headroom=128)
+    state = prefill_build(k, k, RETRO, M, dtype=jnp.float32)
+    assert int(state.n_clusters[0]) == 0
+    assert int(state.length[0]) == n
+    assert int(state.local_len[0]) == n - RETRO.sink
+
+
+def test_ragged_prefill_build_masks_padding():
+    """Right-padded ragged build: pad tokens never enter any store, each
+    row's clustered region ends exactly ``local`` before its true length."""
+    B, S, hd = 3, 640, 16
+    lens = np.array([640, 417, 300], np.int32)
+    rng = np.random.default_rng(5)
+    k = jnp.asarray(rng.standard_normal((B, S, 1, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, 1, hd)), jnp.float32)
+    M = max_clusters(S, RETRO, gen_headroom=128)
+    state = prefill_build(k, v, RETRO, M, dtype=jnp.float32,
+                          lengths=jnp.asarray(lens))
+    np.testing.assert_array_equal(np.asarray(state.length), lens)
+    for b in range(B):
+        clustered = int(np.asarray(state.size[b, 0]).sum())
+        assert clustered == lens[b] - RETRO.sink - RETRO.local
+        pos = np.asarray(state.pos_store[b, 0]).reshape(-1)
+        pos = pos[pos >= 0]
+        assert len(np.unique(pos)) == len(pos)
+        assert pos.min() >= RETRO.sink
+        assert pos.max() < lens[b] - RETRO.local          # pads excluded
+
+
+def test_per_row_masked_flush():
+    """Rows flush independently: only rows with a full staging buffer gain
+    clusters; the others are bit-unchanged."""
+    state, k, v = _build(B=2, H=1)
+    n0 = int(state.n_clusters[0])
+    rng = np.random.default_rng(11)
+    hd = 32
+    # row 0 appends a full update segment; row 1 stays behind by one token
+    for t in range(RETRO.update_segment):
+        kn = jnp.asarray(rng.standard_normal((2, 1, hd)), jnp.float32)
+        act = jnp.asarray([True, t < RETRO.update_segment - 1])
+        state = append_token(state, kn, kn, active=act)
+    lbuf = RETRO.local + RETRO.update_segment
+    np.testing.assert_array_equal(np.asarray(state.local_len), [lbuf, lbuf - 1])
+    before_row1 = jax.tree.map(lambda a: np.asarray(a[1]), state)
+    out = flush_segment(state, RETRO)
+    assert int(out.n_clusters[0]) == n0 + RETRO.update_segment // RETRO.avg_cluster
+    assert int(out.n_clusters[1]) == n0                   # row 1 untouched
+    assert int(out.local_len[0]) == RETRO.local
+    assert int(out.local_len[1]) == lbuf - 1
+    after_row1 = jax.tree.map(lambda a: np.asarray(a[1]), out)
+    for name, a, b in zip(out._fields, before_row1, after_row1):
+        np.testing.assert_array_equal(a, b, err_msg=name)
 
 
 def test_kmeans_clusters_separable_data():
