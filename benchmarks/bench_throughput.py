@@ -31,15 +31,13 @@ def bytes_touched_retro(plan, retro, H, hd, m, itemsize=4):
     return (2 * exact * H * hd + meta + est) * itemsize
 
 
-def run_ragged_continuous():
-    """Ragged-arrival serving scenario: a mixed queue of prompt lengths with
-    staggered generation budgets through the continuous-batching engine.
-    Emits aggregate decode throughput and slot occupancy — the engine-level
-    metric behind the paper's batched-throughput claims (Sec. 6)."""
+def _ragged_setup(quick: bool = False):
+    """Tiny ragged-arrival serving scenario shared by both admission modes:
+    a queue longer than the slot count, so admissions keep happening while
+    other requests decode (the interference the chunked scheduler targets)."""
     import jax as _jax
     from repro.configs.base import AttnConfig, ModelConfig, RetroConfig
     from repro.models import model as M
-    from repro.serving.engine import Request, ServeEngine
 
     retro = RetroConfig(avg_cluster=8, cluster_cap=64, prefill_segment=64,
                         update_segment=32, sink=4, local=32, kmeans_iters=3)
@@ -50,17 +48,78 @@ def run_ragged_continuous():
         dtype="float32", retro=retro)
     params = M.init_params(cfg, _jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    lens = (384, 256, 320, 200, 384, 288)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, L).astype(np.int32),
-                    max_new_tokens=8 + 6 * (i % 3))
-            for i, L in enumerate(lens)]
+    # prompts many chunks long: a blocking admission stalls decode for the
+    # whole prefill, a chunked one for a single 64-token chunk
+    lens = (768, 512, 704, 640) if quick else (768, 512, 704, 640, 768, 576)
+    # alternating budgets keep a long-running request decoding through every
+    # admission, so its inter-token gaps actually witness the stall
+    news = [(10 + 6 * (i % 2)) if quick else (8 + 6 * (i % 3))
+            for i in range(len(lens))]
+    prompts = [rng.integers(0, cfg.vocab, L).astype(np.int32) for L in lens]
+    return cfg, params, prompts, news
+
+
+def _serve_ragged(cfg, params, prompts, news, mode: str, warm: bool = True):
+    """Serve the scenario under one admission mode. ``warm=True`` runs the
+    queue once first so compile time is excluded from latency percentiles
+    (the blocking mode would otherwise also pay per-bucket prefill compiles
+    mid-run — real, but not the steady-state interference being measured)."""
+    from repro.serving.engine import Request, ServeEngine
+
     eng = ServeEngine(cfg, params, runtime="retro", gen_headroom=256,
-                      max_context=384)
-    m = eng.serve(reqs, batch_size=2)
-    emit("ragged_continuous_decode", m.decode_s / max(m.tokens_out, 1) * 1e6,
-         f"decode_tps={m.decode_tps:.1f};tokens={m.tokens_out};"
-         f"occupancy={m.slot_occupancy:.2f};"
-         f"mean_ttft_s={np.mean(m.ttft_s):.2f}")
+                      max_context=768, admission=mode, prefill_chunk=64)
+    for _ in range(2 if warm else 1):
+        reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+                for p, n in zip(prompts, news)]
+        m = eng.serve(reqs, batch_size=2)
+    return m, [r.out_tokens for r in reqs]
+
+
+def compare_admission(quick: bool = False, out_path: str = None) -> dict:
+    """Chunked vs blocking admission on the same ragged queue: same outputs,
+    lower p99 inter-token latency under concurrent admission (chunked never
+    stalls decode longer than one prefill chunk). Optionally writes the
+    result as a JSON artifact (``benchmarks/run.py --quick``)."""
+    cfg, params, prompts, news = _ragged_setup(quick)
+    result = {"scenario": "ragged_continuous", "slots": 2,
+              "requests": len(prompts), "prefill_chunk": 64, "modes": {}}
+    outs = {}
+    for mode in ("blocking", "chunked"):
+        m, outs[mode] = _serve_ragged(cfg, params, prompts, news, mode)
+        result["modes"][mode] = {
+            "decode_tps": round(m.decode_tps, 1),
+            "itl_p50_ms": round(m.itl_p50_s * 1e3, 3),
+            "itl_p99_ms": round(m.itl_p99_s * 1e3, 3),
+            "ttft_p99_s": round(m.ttft_p99_s, 4),
+            "mean_ttft_s": round(float(np.mean(m.ttft_s)), 4),
+            "tokens_out": m.tokens_out,
+            "slot_occupancy": round(m.slot_occupancy, 3),
+        }
+        emit(f"ragged_continuous_{mode}",
+             m.decode_s / max(m.tokens_out, 1) * 1e6,
+             f"decode_tps={m.decode_tps:.1f};tokens={m.tokens_out};"
+             f"occupancy={m.slot_occupancy:.2f};"
+             f"itl_p99_ms={m.itl_p99_s * 1e3:.2f};"
+             f"mean_ttft_s={np.mean(m.ttft_s):.2f}")
+    result["outputs_equal"] = outs["blocking"] == outs["chunked"]
+    b99 = result["modes"]["blocking"]["itl_p99_ms"]
+    c99 = result["modes"]["chunked"]["itl_p99_ms"]
+    result["itl_p99_blocking_over_chunked"] = \
+        round(b99 / c99, 2) if c99 > 0 else None
+    if out_path:
+        import json
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+            f.write("\n")
+    return result
+
+
+def run_ragged_continuous():
+    """Ragged-arrival serving scenario: a mixed queue of prompt lengths with
+    staggered generation budgets through the continuous-batching engine,
+    under both admission modes — the engine-level metric behind the paper's
+    batched-throughput claims (Sec. 6) plus the admission-interference p99."""
+    compare_admission(quick=False)
 
 
 def run():

@@ -1,11 +1,31 @@
 # One benchmark per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+# ``--quick`` runs only the continuous-serving smoke comparison (chunked vs
+# blocking admission on the same ragged queue) and writes the result to a
+# ``BENCH_throughput.json`` artifact so the perf trajectory is recorded per PR.
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 
 def main() -> None:
+    args = [a for a in sys.argv[1:] if a != "--quick"]
+    quick = "--quick" in sys.argv[1:]
+    if quick:
+        from benchmarks import bench_throughput
+        print("name,us_per_call,derived")
+        t0 = time.time()
+        res = bench_throughput.compare_admission(
+            quick=True, out_path="BENCH_throughput.json")
+        print(f"# quick smoke done in {time.time() - t0:.1f}s "
+              f"-> BENCH_throughput.json", flush=True)
+        print(json.dumps(res, indent=2))
+        assert res["outputs_equal"], \
+            "chunked admission changed outputs vs blocking"
+        return
+
     from benchmarks import (bench_accuracy_budget, bench_cache,
                             bench_estimation, bench_longgen, bench_niah,
                             bench_prefill, bench_segment_size,
@@ -21,7 +41,7 @@ def main() -> None:
         ("fig10_niah_trained_model", bench_niah.run),
         ("ragged_continuous_serving", bench_throughput.run_ragged_continuous),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    only = args[0] if args else None
     print("name,us_per_call,derived")
     for name, fn in suites:
         if only and only not in name:

@@ -32,6 +32,7 @@ class BufferStats:
     bytes_over_link: int = 0        # host->device traffic (the "PCIe" analogue)
     bytes_steady: int = 0
     updates_deferred: int = 0
+    pending_hits: int = 0           # repeat misses served from the pending set
 
     @property
     def hit_ratio(self) -> float:
@@ -80,6 +81,7 @@ class WaveBuffer:
         self.tick = 0
         self.stats = BufferStats()
         self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
+        self._pending_map: Dict[int, np.ndarray] = {}   # id -> fetched payload
         self.bytes_per_cluster = int(kv_host[0].nbytes) if n else 0
 
     # ------------------------------------------------------------------ access
@@ -98,7 +100,6 @@ class WaveBuffer:
         self.stats.hits += int(hit.sum())
         self.stats.misses += int((~hit).sum())
         self.stats.bytes_from_cache += int(hit.sum()) * self.bytes_per_cluster
-        self.stats.bytes_over_link += int((~hit).sum()) * self.bytes_per_cluster
 
         payload = np.empty((len(cluster_ids),) + self.kv_host.shape[1:],
                            dtype=self.kv_host.dtype)
@@ -106,13 +107,30 @@ class WaveBuffer:
             payload[hit] = self.cache[slot[hit]]
             self.stamp[slot[hit]] = self.tick            # touch (cheap, vector)
             self.ref_bit[slot[hit]] = True
-        if (~hit).any():
-            payload[~hit] = self.kv_host[cluster_ids[~hit]]
 
-        # defer admission of misses (paper: async cache update by CPU pool)
+        # A cluster missed again before the deferred update lands is served
+        # from the pending set: one link transfer per cluster per update
+        # window, not one per lookup (previously double-fetched AND
+        # double-counted in bytes_over_link).
         if (~hit).any():
-            self._pending.append((cluster_ids[~hit], payload[~hit]))
-            self.stats.updates_deferred += 1
+            fresh_ids: List[int] = []
+            for pos in np.where(~hit)[0]:
+                cid = int(cluster_ids[pos])
+                block = self._pending_map.get(cid)
+                if block is None:
+                    block = self.kv_host[cid]
+                    self._pending_map[cid] = block
+                    fresh_ids.append(cid)
+                    self.stats.bytes_over_link += self.bytes_per_cluster
+                else:
+                    self.stats.pending_hits += 1
+                payload[pos] = block
+            # defer admission of fresh misses (paper: async update by CPU pool)
+            if fresh_ids:
+                self._pending.append((
+                    np.asarray(fresh_ids, dtype=np.int64),
+                    np.stack([self._pending_map[c] for c in fresh_ids])))
+                self.stats.updates_deferred += 1
 
         if steady_payload is not None:
             self.stats.bytes_steady += int(steady_payload.nbytes)
@@ -125,6 +143,7 @@ class WaveBuffer:
         for ids, payload in self._pending:
             self._admit(ids, payload)
         self._pending.clear()
+        self._pending_map.clear()
 
     def _victims(self, n: int) -> np.ndarray:
         if self.policy == "lru":

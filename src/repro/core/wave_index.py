@@ -221,6 +221,200 @@ def prefill_build(k: jax.Array, v: jax.Array, retro: RetroConfig, M: int,
     return state
 
 
+# ---------------------------------------------------------------------------
+# Chunked (streaming) prefill build — admission interleaved with decode.
+#
+# ``prefill_build`` consumes the whole prompt at once; a serving engine that
+# wants to admit a request WITHOUT stalling in-flight decodes instead streams
+# the prompt through ``prefill_append_chunk`` a fixed-size chunk at a time and
+# closes the build with ``prefill_finalize``. The final WaveState is
+# bit-identical to ``prefill_build`` on the full prompt for ANY chunk split:
+# segment boundaries are position- (not chunk-) aligned, and a full segment is
+# only clustered once ``local`` further tokens have arrived — those tokens can
+# no longer end up in the final local window, so greedy flushing reproduces
+# exactly the segments the monolithic layout would cluster.
+# ---------------------------------------------------------------------------
+
+
+class ChunkedPrefill(NamedTuple):
+    """Streaming prefill-build state.
+
+    ``state`` is the WaveState under construction: the sink zone and cluster
+    stores fill as chunks arrive; the local window and length bookkeeping are
+    written by ``prefill_finalize``. ``stage_*`` hold the not-yet-clustered
+    tokens past the sink — row b's staged tokens sit at absolute positions
+    [seen[b] - staged[b], seen[b]).
+    """
+    state: WaveState
+    stage_k: jax.Array      # (B, H, stage_cap, hd)
+    stage_v: jax.Array
+    staged: jax.Array       # (B,) int32 — valid tokens in the staging buffer
+    seen: jax.Array         # (B,) int32 — prompt tokens consumed so far
+
+
+def stage_capacity(retro: RetroConfig, chunk: int) -> int:
+    """Staging-buffer size for chunked prefill: between flushes the buffer
+    holds < prefill_segment + local tokens, plus one incoming chunk."""
+    return retro.prefill_segment + retro.local + chunk
+
+
+def init_chunked_prefill(B: int, H: int, hd: int, M: int, retro: RetroConfig,
+                         chunk: int, dtype=jnp.bfloat16,
+                         stage_dtype=None) -> ChunkedPrefill:
+    """Fresh streaming build for prompts fed in chunks of <= ``chunk`` tokens.
+
+    ``stage_dtype`` should match the dtype of the incoming K/V chunks (default:
+    ``dtype``) — clustering reads the staged copies, and bit-identity with
+    ``prefill_build`` (which clusters the raw input) needs them unconverted.
+    """
+    cap = stage_capacity(retro, chunk)
+    sd = dtype if stage_dtype is None else stage_dtype
+    return ChunkedPrefill(
+        state=init_wave_state(B, H, hd, M, retro, dtype),
+        stage_k=jnp.zeros((B, H, cap, hd), sd),
+        stage_v=jnp.zeros((B, H, cap, hd), sd),
+        staged=jnp.zeros((B,), jnp.int32),
+        seen=jnp.zeros((B,), jnp.int32))
+
+
+def _where_rows(rows: jax.Array, new, old):
+    """Per-row select over matching pytrees (leading dim B)."""
+    B = rows.shape[0]
+    return jax.tree.map(
+        lambda n, o: jnp.where(rows.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+        new, old)
+
+
+def scatter_chunk_rows(buf: jax.Array, chunk: jax.Array,
+                       idx: jax.Array) -> jax.Array:
+    """Per-row scatter of a token chunk into a buffer's token axis.
+
+    buf: (B, H, N, hd); chunk: (B, H, C, hd); idx: (B, C) target token slots —
+    out-of-range entries (>= N) are DROPPED, so callers route/pad by clamping
+    unwanted writes past the end instead of masking."""
+    return jax.vmap(
+        lambda b, c, i: b.at[:, i].set(c.astype(b.dtype), mode="drop")
+    )(buf, chunk, idx)
+
+
+def _flush_stage(cp: ChunkedPrefill, retro: RetroConfig) -> ChunkedPrefill:
+    """Cluster the oldest full prefill segment of each SAFE staging buffer.
+
+    A row is flushed when its staging buffer holds prefill_segment + local
+    tokens: the oldest segment then provably ends >= ``local`` before the
+    final prompt end, so it is one of the full segments ``prefill_build``
+    would cluster. Rows below the threshold pass through bit-unchanged.
+    """
+    seg = retro.prefill_segment
+    rows = cp.staged >= seg + retro.local
+    start = cp.seen - cp.staged                  # abs position of stage[0]
+    pos = start[:, None] + jnp.arange(seg, dtype=jnp.int32)[None, :]
+
+    def row_fn(kk, vv, p):
+        def bh(k1, v1):
+            return cluster_segment(k1[:seg], v1[:seg], p, retro.avg_cluster,
+                                   retro.cluster_cap, retro.kmeans_iters,
+                                   retro.centering)
+        return jax.vmap(bh)(kk, vv)
+
+    res = jax.vmap(row_fn)(cp.stage_k, cp.stage_v, pos)
+    flushed = _write_clusters(cp.state, res, cp.state.n_clusters)
+    return ChunkedPrefill(
+        state=_where_rows(rows, flushed, cp.state),
+        stage_k=_where_rows(rows, jnp.roll(cp.stage_k, -seg, axis=2),
+                            cp.stage_k),
+        stage_v=_where_rows(rows, jnp.roll(cp.stage_v, -seg, axis=2),
+                            cp.stage_v),
+        staged=jnp.where(rows, cp.staged - seg, cp.staged),
+        seen=cp.seen)
+
+
+def prefill_append_chunk(cp: ChunkedPrefill, k_chunk: jax.Array,
+                         v_chunk: jax.Array, retro: RetroConfig,
+                         chunk_lens: Optional[jax.Array] = None
+                         ) -> ChunkedPrefill:
+    """Extend a streaming build with the next (B, C, H, hd) chunk of prompt K/V.
+
+    Tokens are routed by absolute position: positions < sink fill the sink
+    zone, the rest append to the staging buffer; whenever a row has staged a
+    full ``prefill_segment`` plus the ``local`` safety margin, the oldest
+    segment is clustered (per-row masked) exactly as ``prefill_build`` would.
+
+    ``chunk_lens``: optional (B,) int32 valid prefix of this chunk per row
+    (right-padded final chunks; rows may advance at different rates — a row
+    with 0 consumes nothing and is bit-unchanged).
+    """
+    B, C, H, hd = k_chunk.shape
+    sink = retro.sink
+    clens = jnp.full((B,), C, jnp.int32) if chunk_lens is None \
+        else jnp.asarray(chunk_lens, jnp.int32)
+    kc = jnp.swapaxes(k_chunk, 1, 2)                        # (B, H, C, hd)
+    vc = jnp.swapaxes(v_chunk, 1, 2)
+
+    j = jnp.arange(C, dtype=jnp.int32)[None, :]             # (1, C)
+    p = cp.seen[:, None] + j                                # (B, C) abs pos
+    valid = j < clens[:, None]
+
+    # scatter with out-of-range index => dropped write (per-row routing)
+    sink_idx = jnp.where(valid & (p < sink), p, sink)
+    j0 = jnp.clip(sink - cp.seen, 0, C)                     # first staged j
+    stage_cap = cp.stage_k.shape[2]
+    stage_idx = jnp.where(valid & (p >= sink),
+                          cp.staged[:, None] + j - j0[:, None], stage_cap)
+
+    scat = scatter_chunk_rows
+    state = cp.state._replace(sink_k=scat(cp.state.sink_k, kc, sink_idx),
+                              sink_v=scat(cp.state.sink_v, vc, sink_idx))
+    cp = ChunkedPrefill(
+        state=state,
+        stage_k=scat(cp.stage_k, kc, stage_idx),
+        stage_v=scat(cp.stage_v, vc, stage_idx),
+        staged=cp.staged + (clens - jnp.clip(sink - cp.seen, 0, clens)),
+        seen=cp.seen + clens)
+    # a C-token chunk can complete at most ceil(C / segment) segments
+    for _ in range(-(-C // retro.prefill_segment)):
+        cp = _flush_stage(cp, retro)
+    return cp
+
+
+def prefill_finalize(cp: ChunkedPrefill, retro: RetroConfig,
+                     total_len: int) -> WaveState:
+    """Close a streaming build: cluster the partial tail segment and install
+    the local window. ``total_len`` is static and must equal every row's
+    consumed token count (``cp.seen``); rows that streamed at different rates
+    must have converged. The result is bit-identical to ``prefill_build`` on
+    the same prompt."""
+    if total_len <= retro.sink:
+        raise ValueError(
+            f"prompt length {total_len} must exceed the sink width {retro.sink}")
+    local = min(retro.local, total_len - retro.sink)
+    _, tail, _ = prefill_layout(total_len, retro)
+    state = cp.state
+    B, H, _, hd = state.local_k.shape
+
+    if tail > 0:
+        start = cp.seen - cp.staged
+        pos = start[:, None] + jnp.arange(tail, dtype=jnp.int32)[None, :]
+
+        def row_fn(kk, vv, p):
+            def bh(k1, v1):
+                return cluster_segment(k1[:tail], v1[:tail], p,
+                                       retro.avg_cluster, retro.cluster_cap,
+                                       retro.kmeans_iters, retro.centering)
+            return jax.vmap(bh)(kk, vv)
+
+        res = jax.vmap(row_fn)(cp.stage_k, cp.stage_v, pos)
+        state = _write_clusters(state, res, state.n_clusters)
+
+    lk = cp.stage_k[:, :, tail:tail + local].astype(state.local_k.dtype)
+    lv = cp.stage_v[:, :, tail:tail + local].astype(state.local_v.dtype)
+    return state._replace(
+        local_k=jax.lax.dynamic_update_slice(state.local_k, lk, (0, 0, 0, 0)),
+        local_v=jax.lax.dynamic_update_slice(state.local_v, lv, (0, 0, 0, 0)),
+        local_len=jnp.full((B,), local, jnp.int32),
+        length=cp.seen)
+
+
 def append_token(state: WaveState, k_new: jax.Array, v_new: jax.Array,
                  active: Optional[jax.Array] = None) -> WaveState:
     """Append one generated token's (B, H, hd) K/V to the local buffer.

@@ -2,11 +2,14 @@
 
 Ragged prompt lengths and staggered generation lengths exercise the slot
 scheduler: finished requests free their slot mid-stream and queued requests
-are admitted by per-slot prefill.
+are admitted mid-stream — by default one fixed-size prefill chunk at a time,
+interleaved between decode steps (``--admission blocking`` restores the
+monolithic per-slot prefill for comparison; inter-token p50/p99 shows the
+admission interference each mode leaves behind).
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_2b --reduced \
         --requests 6 --batch 2 --prompt-lens 640,512,700 --new-tokens 16 \
-        --stagger 8
+        --stagger 8 --admission chunked --prefill-chunk 128
 """
 from __future__ import annotations
 
@@ -32,7 +35,12 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--stagger", type=int, default=0,
                     help="request i generates new-tokens + i*stagger tokens")
-    ap.add_argument("--prefill-bucket", type=int, default=1)
+    ap.add_argument("--admission", default="chunked",
+                    choices=["chunked", "blocking"])
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="chunked-admission tokens per scheduler iteration")
+    ap.add_argument("--prefill-bucket", type=int, default=1,
+                    help="blocking-mode prompt-length bucket")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -40,6 +48,8 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
     lens = [int(x) for x in args.prompt_lens.split(",")]
     engine = ServeEngine(cfg, params, runtime=args.runtime, gen_headroom=512,
+                         admission=args.admission,
+                         prefill_chunk=args.prefill_chunk,
                          prefill_bucket=args.prefill_bucket)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, lens[i % len(lens)])
@@ -48,9 +58,11 @@ def main():
             for i in range(args.requests)]
     m = engine.serve(reqs, batch_size=args.batch)
     print(f"served {len(reqs)} requests on {args.batch} slots "
-          f"({args.runtime}): prefill {m.prefill_s:.2f}s, "
+          f"({args.runtime}, {args.admission} admission): "
+          f"prefill {m.prefill_s:.2f}s, "
           f"decode {m.tokens_out} tokens @ {m.decode_tps:.1f} tok/s, "
-          f"slot occupancy {m.slot_occupancy:.2f}")
+          f"slot occupancy {m.slot_occupancy:.2f}, "
+          f"itl p50/p99 {m.itl_p50_s * 1e3:.1f}/{m.itl_p99_s * 1e3:.1f} ms")
     for i, r in enumerate(reqs):
         print(f"  req {i}: prompt {len(r.prompt)}, out {len(r.out_tokens)}, "
               f"ttft {r.ttft_s:.2f}s, decode {r.decode_tps:.1f} tok/s")

@@ -7,6 +7,12 @@
     logits, state    = apply_decode(params, cfg, state, token, runtime=...)
     state            = make_serve_state(cfg, B, seq_len, runtime=...)
 
+Chunked admission (attention families; others pass through to blocking):
+
+    cs            = make_prefill_chunk_state(cfg, B, max_ctx, chunk=C, ...)
+    logits, cs    = apply_prefill_chunk(params, cfg, chunk_batch, cs, ...)
+    state         = finalize_prefill_chunk(cfg, cs, total_len=L, ...)
+
 ``batch`` dict keys: tokens (B, T) int32; targets (B, T) int32 (train);
 patch_embeds (B, P, D) for vlm; frames (B, F, D) for audio.
 """
@@ -104,6 +110,54 @@ def apply_prefill(params, cfg: ModelConfig, batch, *, runtime: str = "retro",
                               runtime=runtime, plan=plan,
                               gen_headroom=gen_headroom, cache_len=cache_len)
     raise ValueError(cfg.family)
+
+
+def supports_chunked_prefill(cfg: ModelConfig, runtime: str = "retro") -> bool:
+    """Chunked (interleaved) admission is implemented for the attention
+    families under both runtimes; recurrent prefills (ssm/hybrid) and the
+    enc-dec decoder consume their prompt in one pass — engines fall back to
+    blocking admission for them (see ``ServeEngine``)."""
+    return cfg.family in ATTN_FAMILIES
+
+
+def make_prefill_chunk_state(cfg: ModelConfig, B: int, max_ctx: int, *,
+                             runtime: str = "retro", chunk: int,
+                             gen_headroom: int = 4096):
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.init_prefill_chunk_state(
+            cfg, B, max_ctx, runtime=runtime, chunk=chunk,
+            gen_headroom=gen_headroom)
+    raise NotImplementedError(
+        f"chunked prefill unsupported for family {cfg.family}; "
+        "use blocking admission (apply_prefill)")
+
+
+def apply_prefill_chunk(params, cfg: ModelConfig, batch, state, *,
+                        runtime: str = "retro", chunk_lens=None):
+    """Consume the next right-padded prompt chunk ``batch['tokens']`` (B, C).
+
+    Chunk queries attend causally to the prior prompt prefix + the chunk
+    itself; the wave index (retro) is built incrementally and bit-identically
+    to the monolithic build. Returns (last-valid-position logits, new state).
+    Pass-through families (encdec/hybrid/ssm) raise — callers fall back to
+    ``apply_prefill`` (blocking admission)."""
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.prefill_chunk(
+            params, cfg, batch["tokens"], state, runtime=runtime,
+            chunk_lens=chunk_lens, patch_embeds=batch.get("patch_embeds"))
+    raise NotImplementedError(
+        f"chunked prefill unsupported for family {cfg.family}; "
+        "use blocking admission (apply_prefill)")
+
+
+def finalize_prefill_chunk(cfg: ModelConfig, state, *, runtime: str = "retro",
+                           total_len: int):
+    """Close a chunked admission into a decode-ready ServeState."""
+    if cfg.family in ATTN_FAMILIES:
+        return transformer.finalize_prefill_chunk(
+            cfg, state, runtime=runtime, total_len=total_len)
+    raise NotImplementedError(
+        f"chunked prefill unsupported for family {cfg.family}")
 
 
 def apply_decode(params, cfg: ModelConfig, state, token, *,

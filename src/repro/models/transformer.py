@@ -17,8 +17,11 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import attention as wa
-from repro.core.wave_index import (WaveState, append_token, init_wave_state,
-                                   maybe_flush, prefill_build)
+from repro.core.wave_index import (WaveState, append_token,
+                                   init_chunked_prefill, init_wave_state,
+                                   maybe_flush, prefill_append_chunk,
+                                   prefill_build, prefill_finalize,
+                                   scatter_chunk_rows)
 from repro.core.zones import ZonePlan, plan_zones
 from repro.models import layers as L
 from repro.models.moe import init_moe, moe_apply, moe_apply_grouped
@@ -208,6 +211,155 @@ def prefill(params, cfg: ModelConfig, tokens, patch_embeds=None, *,
             x, (lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     logits = unembed(params, cfg, last)
     return logits, ServeState(kv=kv)
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill — admission interleaved with decode (serving engine).
+#
+# The prompt is consumed a fixed-size chunk at a time: chunk queries attend
+# causally to the prior prompt prefix + the chunk itself via an exact
+# admission-time dense cache, while the wave index is built incrementally by
+# ``prefill_append_chunk``. One compiled shape serves every prompt length
+# (the final chunk is right-padded and masked). The admission cache is
+# dropped at finalize for the retro runtime; for the dense-cache runtime it
+# IS the serve state. Chunk attention is exact — ``sparse_prefill_blocks``
+# only applies to the monolithic prefill path.
+# ---------------------------------------------------------------------------
+
+
+class PrefillChunkState(NamedTuple):
+    """Admission-time state for chunk-by-chunk prefill. Leaves are stacked
+    per-layer (L, ...). ``cache`` holds the exact K/V of the prompt so far;
+    ``wave`` is the streaming wave-index build (retro) or None (full)."""
+    cache: Any              # stacked DenseCache
+    wave: Any               # stacked ChunkedPrefill or None
+
+
+def init_prefill_chunk_state(cfg: ModelConfig, B: int, max_ctx: int, *,
+                             runtime: str = "retro", chunk: int,
+                             gen_headroom: int = 4096) -> PrefillChunkState:
+    """``max_ctx`` pins the admission geometry to the engine's decode state so
+    the finalized state grafts into the shared batch. The dense-runtime cache
+    is allocated at full decode capacity (it becomes the serve state); the
+    retro admission cache only needs the prompt capacity."""
+    a, retro = cfg.attn, cfg.retro
+    plan = plan_zones(max_ctx, retro, gen_headroom)
+    cache_len = max_ctx if runtime == "retro" else max_ctx + gen_headroom
+
+    def one(_):
+        cache = wa.DenseCache(
+            jnp.zeros((B, a.n_kv_heads, cache_len, a.head_dim), _dtype(cfg)),
+            jnp.zeros((B, a.n_kv_heads, cache_len, a.head_dim), _dtype(cfg)),
+            jnp.zeros((B,), jnp.int32))
+        if runtime == "retro":
+            return cache, init_chunked_prefill(
+                B, a.n_kv_heads, a.head_dim, plan.m_max, retro, chunk,
+                _dtype(cfg))
+        return cache, None
+
+    cache, wave = jax.vmap(one)(jnp.arange(cfg.n_layers))
+    return PrefillChunkState(cache=cache, wave=wave)
+
+
+def _cache_append_chunk(cache: wa.DenseCache, k, v, clens) -> wa.DenseCache:
+    """Append a (B, C, Hkv, hd) chunk at each row's cursor. Only the valid
+    prefix of each row's chunk is written (dropped scatter — a padded final
+    chunk near capacity must not clamp into earlier entries)."""
+    B, C = k.shape[:2]
+    cap = cache.k.shape[2]
+    j = jnp.arange(C, dtype=jnp.int32)[None, :]
+    clens = jnp.asarray(clens, jnp.int32)
+    idx = jnp.where(j < clens[:, None], cache.length[:, None] + j, cap)
+    return wa.DenseCache(
+        scatter_chunk_rows(cache.k, jnp.swapaxes(k, 1, 2), idx),
+        scatter_chunk_rows(cache.v, jnp.swapaxes(v, 1, 2), idx),
+        cache.length + clens)
+
+
+def _chunk_attention(q, cache: wa.DenseCache, t0, clens, *, window=None,
+                     softcap=None):
+    """Exact causal attention of chunk queries against the admission cache
+    (which already holds the chunk). q: (B, C, Hq, hd); t0: (B,) absolute
+    position of q[:, 0]; keys beyond each row's filled prefix are masked."""
+    B, C, Hq, hd = q.shape
+    Hkv = cache.k.shape[1]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, C, Hkv, G, hd)
+    s = jnp.einsum("bchgd,bhtd->bhgct", qg.astype(jnp.float32),
+                   cache.k.astype(jnp.float32)) * scale
+    s = L.soft_cap(s, softcap)
+    kpos = jnp.arange(cache.k.shape[2])
+    q_abs = t0[:, None] + jnp.arange(C)                     # (B, C)
+    ok = (kpos[None, None, :] <= q_abs[:, :, None]) \
+        & (kpos[None, None, :] < (t0 + clens)[:, None, None])
+    if window is not None:
+        ok = ok & (kpos[None, None, :] > q_abs[:, :, None] - window)
+    s = jnp.where(ok[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgct,bhtd->bhgcd", p, cache.v.astype(jnp.float32))
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, C, Hq, hd).astype(q.dtype)
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, state: PrefillChunkState,
+                  *, runtime: str = "retro", chunk_lens=None,
+                  patch_embeds=None) -> Tuple[jax.Array, PrefillChunkState]:
+    """Process the next prompt chunk. tokens: (B, C) right-padded; returns
+    (logits at each row's last valid chunk position, new state).
+
+    ``chunk_lens``: optional (B,) valid prefix per row (None = full chunk).
+    ``patch_embeds``: full (B, P, D) vlm patch embeddings — the slice
+    overlapping this chunk's absolute positions replaces the token embeds.
+    """
+    a, retro = cfg.attn, cfg.retro
+    B, C = tokens.shape
+    clens = jnp.full((B,), C, jnp.int32) if chunk_lens is None \
+        else jnp.asarray(chunk_lens, jnp.int32)
+    t0 = state.cache.length[0]                              # (B,) shared by layers
+    positions = t0[:, None] + jnp.arange(C)                 # (B, C) per-row
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    if patch_embeds is not None:
+        P = patch_embeds.shape[1]
+        pe = jnp.take_along_axis(patch_embeds,
+                                 jnp.clip(positions, 0, P - 1)[..., None],
+                                 axis=1)
+        x = jnp.where((positions < P)[..., None], pe.astype(x.dtype), x)
+
+    def layer_fn(x, xs):
+        lp, cache_l, wave_l, window = xs
+        h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attention_qkv(lp["attn"], h, a.n_heads, a.n_kv_heads,
+                                  a.head_dim, positions, a.rope_theta)
+        cache_l = _cache_append_chunk(cache_l, k, v, clens)
+        o = _chunk_attention(q, cache_l, t0, clens, window=window,
+                             softcap=a.softcap)
+        x = x + o.reshape(B, C, -1) @ lp["attn"]["wo"]
+        h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+        y, _ = _ffn(lp, h, cfg)
+        if runtime == "retro":
+            wave_l = prefill_append_chunk(wave_l, k, v, retro, clens)
+        return x + y, (cache_l, wave_l)
+
+    x, (cache, wave) = jax.lax.scan(
+        layer_fn, x,
+        (params["layers"], state.cache, state.wave, params["window"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, jnp.maximum(clens - 1, 0)[:, None, None].astype(jnp.int32),
+        axis=1)[:, 0]
+    return unembed(params, cfg, last), PrefillChunkState(cache=cache, wave=wave)
+
+
+def finalize_prefill_chunk(cfg: ModelConfig, state: PrefillChunkState, *,
+                           runtime: str = "retro", total_len: int) -> ServeState:
+    """Close a chunked admission: retro clusters the tail + installs the local
+    window (bit-identical wave state to ``prefill_build``); the dense runtime's
+    admission cache is the serve state as-is."""
+    if runtime != "retro":
+        return ServeState(kv=state.cache)
+    kv = jax.vmap(
+        lambda w: prefill_finalize(w, cfg.retro, total_len))(state.wave)
+    return ServeState(kv=kv)
 
 
 def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,

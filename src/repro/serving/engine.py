@@ -1,20 +1,38 @@
-"""Continuous-batching serving engine.
+"""Continuous-batching serving engine with chunked admission and a sync-free
+decode loop.
 
 The decode loop runs a fixed number of SLOTS (the decode batch). Each slot
 holds at most one in-flight request; finished requests free their slot and
-queued requests are admitted mid-stream via a per-slot prefill whose state is
-grafted into the shared decode batch. Per-request wave-index bookkeeping
+queued requests are admitted mid-stream. Per-request wave-index bookkeeping
 (``length``/``local_len``/``n_clusters`` are (B,) arrays) lets ragged
 requests sit at different positions in one batch; staging-buffer flushes are
 per-row masked, so rows flush on their own schedule.
 
-Ragged prompts are right-padded to a jit bucket and masked (the wave index
-never stores a pad token; logits are read at each row's true last position),
-so a handful of compiled prefill shapes serves arbitrary traffic.
+Admission (``admission="chunked"``, the default where the family supports
+it): a request's prompt is consumed one fixed-size chunk per scheduler
+iteration, interleaved between decode steps, so in-flight decodes never stall
+longer than one chunk. One compiled chunk shape (the final chunk is
+right-padded and masked) replaces the per-bucket prefill jit cache; the wave
+index is built incrementally (``prefill_append_chunk``) and finalized
+bit-identically to the monolithic build. ``admission="blocking"`` keeps the
+monolithic per-slot prefill (bucketed/jit-cached) for comparison and for the
+pass-through families (encdec/hybrid/ssm), which fall back automatically.
 
-Metrics are per-request (TTFT, decode tok/s) plus engine-level slot occupancy
-and aggregate throughput. Only real requests count: free slots produce
-logits that are never sampled, so padding can't inflate ``tokens_out``.
+The decode loop issues NO host sync between consecutive decode dispatches:
+tokens are sampled on device and fed device-to-device into the next step; the
+ids of step t are read back (the loop's only sync) only after step t+1 has
+been dispatched. Completion is therefore detected one step late — the extra
+speculative token of a just-finished request is dropped on harvest, and its
+slot's state is overwritten by the next admission graft. First tokens of all
+requests admitted in the same iteration are sampled with ONE coalesced
+device->host readback.
+
+Metrics are per-request (TTFT, decode tok/s) plus engine-level slot occupancy,
+aggregate throughput, and inter-token latency (p50/p99 over gaps between
+consecutive token deliveries of continuing requests — the decode-interference
+signal chunked admission exists to shrink). Only real requests count: free
+slots produce logits that are never sampled, so padding can't inflate
+``tokens_out``.
 """
 from __future__ import annotations
 
@@ -22,7 +40,7 @@ import time
 from collections import deque
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -59,6 +77,9 @@ class ServeMetrics:
     n_slots: int = 0
     ttft_s: List[float] = field(default_factory=list)
     request_tps: List[float] = field(default_factory=list)
+    # gaps between consecutive token deliveries of continuing requests —
+    # includes any admission work scheduled in between (the interference term)
+    step_s: List[float] = field(default_factory=list)
 
     @property
     def decode_tps(self) -> float:
@@ -68,9 +89,35 @@ class ServeMetrics:
     def slot_occupancy(self) -> float:
         return self.occupied_slot_steps / max(self.steps * self.n_slots, 1)
 
+    @property
+    def itl_p50_s(self) -> float:
+        return float(np.percentile(self.step_s, 50)) if self.step_s else 0.0
+
+    @property
+    def itl_p99_s(self) -> float:
+        return float(np.percentile(self.step_s, 99)) if self.step_s else 0.0
+
+    @property
+    def ttft_p50_s(self) -> float:
+        return float(np.percentile(self.ttft_s, 50)) if self.ttft_s else 0.0
+
+    @property
+    def ttft_p99_s(self) -> float:
+        return float(np.percentile(self.ttft_s, 99)) if self.ttft_s else 0.0
+
 
 # back-compat alias (pre-continuous engines returned per-wave metrics)
 WaveMetrics = ServeMetrics
+
+
+@dataclass
+class _Admission:
+    """One slot's in-progress chunked admission (or a just-finished blocking
+    prefill awaiting its coalesced first-token sample)."""
+    req: Request
+    cstate: Any = None                  # PrefillChunkState (chunked mode)
+    consumed: int = 0
+    logits: Any = None                  # device logits of the last chunk
 
 
 class ServeEngine:
@@ -78,13 +125,17 @@ class ServeEngine:
     batch. ``max_context`` pins the decode geometry (zone plan / cluster-store
     capacity); all requests served by one engine share it, so a request's
     outputs are independent of what else shares the batch (a solo run at
-    batch_size=1 reproduces them token-for-token). ``prefill_bucket`` > 1
-    right-pads prompts up to a multiple, trading a masked prefill for fewer
-    compiled shapes."""
+    batch_size=1 reproduces them token-for-token, under either admission
+    mode). ``prefill_chunk`` sets the chunked-admission chunk size;
+    ``prefill_bucket`` > 1 right-pads blocking-mode prompts up to a multiple,
+    trading a masked prefill for fewer compiled shapes."""
 
     def __init__(self, cfg: ModelConfig, params, *, runtime: str = "retro",
                  gen_headroom: int = 1024, temperature: float = 0.0,
-                 max_context: Optional[int] = None, prefill_bucket: int = 1):
+                 max_context: Optional[int] = None, prefill_bucket: int = 1,
+                 admission: str = "chunked", prefill_chunk: int = 256):
+        if admission not in ("chunked", "blocking"):
+            raise ValueError(f"unknown admission mode {admission!r}")
         self.cfg = cfg
         self.params = params
         self.runtime = runtime
@@ -92,8 +143,12 @@ class ServeEngine:
         self.temperature = temperature
         self.max_context = max_context
         self.prefill_bucket = max(1, prefill_bucket)
+        self.admission = admission
+        self.prefill_chunk = max(1, prefill_chunk)
         self._prefill_jit: Dict[Any, Any] = {}
         self._decode_jit: Dict[Any, Any] = {}
+        self._chunk_jit: Dict[Any, Any] = {}
+        self._finalize_jit: Dict[Any, Any] = {}
         self._graft = jax.jit(
             lambda big, small, slot: jax.tree.map(
                 lambda b, s: jax.lax.dynamic_update_slice_in_dim(
@@ -107,6 +162,9 @@ class ServeEngine:
         self._categorical = jax.jit(
             lambda key, lg, temp: jax.random.categorical(
                 key, lg / temp).astype(jnp.int32))
+        # scatter freshly admitted first tokens into the device token vector
+        self._merge_tokens = jax.jit(
+            lambda toks, upd, mask: jnp.where(mask, upd, toks))
 
     # ------------------------------------------------------------- compiled fns
     def _bucket(self, L: int) -> int:
@@ -136,6 +194,48 @@ class ServeEngine:
             self._prefill_jit[key] = prefill
         return self._prefill_jit[key]
 
+    def _chunk_fns(self, max_ctx: int):
+        """ONE compiled prefill shape per engine geometry: every prompt is
+        consumed as right-padded (1, prefill_chunk) chunks. The vlm variant
+        additionally threads the request's patch embeddings (one compile per
+        distinct patch shape)."""
+        if max_ctx not in self._chunk_jit:
+            cfg, rt = self.cfg, self.runtime
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def chunk(params, cstate, toks, clen):
+                return M.apply_prefill_chunk(params, cfg, {"tokens": toks},
+                                             cstate, runtime=rt,
+                                             chunk_lens=clen)
+
+            @partial(jax.jit, donate_argnums=(1,))
+            def chunk_pe(params, cstate, toks, clen, pe):
+                return M.apply_prefill_chunk(
+                    params, cfg, {"tokens": toks, "patch_embeds": pe},
+                    cstate, runtime=rt, chunk_lens=clen)
+
+            self._chunk_jit[max_ctx] = (chunk, chunk_pe)
+        return self._chunk_jit[max_ctx]
+
+    def _finalize_fn(self, total_len: int, max_ctx: int):
+        """Finalize + graft one admitted slot. Per-prompt-length entries are
+        cheap (tail clustering + scatter) — the expensive compiled shape, the
+        chunk forward, is shared."""
+        key = (total_len, max_ctx)
+        if key not in self._finalize_jit:
+            cfg, rt = self.cfg, self.runtime
+
+            @partial(jax.jit, donate_argnums=(0,))
+            def fin(big, cstate, slot):
+                st1 = M.finalize_prefill_chunk(cfg, cstate, runtime=rt,
+                                               total_len=total_len)
+                return jax.tree.map(
+                    lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+                        b, s.astype(b.dtype), slot, axis=1), big, st1)
+
+            self._finalize_jit[key] = fin
+        return self._finalize_jit[key]
+
     def _decode_fns(self, batch_size: int, max_ctx: int):
         key = (batch_size, max_ctx)
         if key not in self._decode_jit:
@@ -157,14 +257,15 @@ class ServeEngine:
         return self._decode_jit[key]
 
     # ---------------------------------------------------------------- serving
+    def _sample_dev(self, logits, key):
+        """Device logits -> device (B,) token ids (no host transfer)."""
+        if self.temperature <= 0:
+            return self._argmax(logits)
+        return self._categorical(key, logits, jnp.float32(self.temperature))
+
     def _sample(self, logits, key) -> np.ndarray:
         """Device logits -> host (B,) token ids (blocks until ready)."""
-        if self.temperature <= 0:
-            drawn = self._argmax(logits)
-        else:
-            drawn = self._categorical(key, logits,
-                                      jnp.float32(self.temperature))
-        return np.asarray(drawn).astype(np.int64)
+        return np.asarray(self._sample_dev(logits, key)).astype(np.int64)
 
     def serve(self, requests: List[Request], batch_size: int,
               seed: int = 0) -> ServeMetrics:
@@ -181,6 +282,11 @@ class ServeEngine:
                     f"prompt length {len(r.prompt)} outside "
                     f"[{min_len}, {max_ctx}]")
         B = batch_size
+        # chunk attention is exact: configs that opt into block-sparse
+        # prefill keep the monolithic (sparse) admission path
+        chunked = self.admission == "chunked" \
+            and M.supports_chunked_prefill(cfg, rt) \
+            and cfg.sparse_prefill_blocks == 0
         decode, flush = self._decode_fns(B, max_ctx)
         state = M.make_serve_state(cfg, B, max_ctx, runtime=rt,
                                    gen_headroom=self.gen_headroom,
@@ -190,10 +296,15 @@ class ServeEngine:
 
         queue = deque(requests)
         slots: List[Optional[Request]] = [None] * B
+        admitting: List[Optional[_Admission]] = [None] * B
         active = np.zeros(B, bool)
-        tokens = np.zeros(B, np.int64)
         staged = np.zeros(B, np.int64)      # host mirror of local_len (retro)
         admit_t = np.zeros(B, float)
+        tokens_dev = jnp.zeros((B,), jnp.int32)     # device-resident ids
+        prev_sampled = None                 # step t's device ids (unsynced)
+        prev_snapshot: List[Optional[Request]] = [None] * B
+        last_deliver_t: Optional[float] = None
+        last_deliver: set = set()
         metrics = ServeMetrics(n_slots=B)
         key = jax.random.PRNGKey(seed)
         t_start = time.perf_counter()
@@ -207,66 +318,143 @@ class ServeEngine:
             slots[i] = None
             active[i] = False
 
-        while queue or active.any():
-            # ---- admission: fill free slots from the queue -----------------
+        while queue or active.any() or any(a is not None for a in admitting) \
+                or prev_sampled is not None:
+            # ---- admission: one prefill chunk per admitting slot ----------
+            t0 = time.perf_counter()
+            completed: List[Tuple[int, _Admission]] = []
             for i in range(B):
-                if active[i] or not queue:
+                if not chunked:
+                    if active[i] or slots[i] is not None or not queue:
+                        continue
+                    req = queue.popleft()
+                    L = len(req.prompt)
+                    S_b = min(self._bucket(L), max_ctx)
+                    assert S_b >= L
+                    toks = np.zeros((1, S_b), np.int32)
+                    toks[0, :L] = req.prompt
+                    batch = {"tokens": jnp.asarray(toks)}
+                    if req.extra:
+                        batch.update(req.extra)
+                    prefill = self._prefill_fn(S_b, max_ctx)
+                    logits, st1 = prefill(self.params, batch,
+                                          jnp.asarray([L], jnp.int32))
+                    state = self._graft(state, st1, jnp.asarray(i, jnp.int32))
+                    completed.append((i, _Admission(req=req, logits=logits,
+                                                    consumed=L)))
                     continue
-                req = queue.popleft()
-                L = len(req.prompt)
-                S_b = min(self._bucket(L), max_ctx)
-                assert S_b >= L
-                toks = np.zeros((1, S_b), np.int32)
-                toks[0, :L] = req.prompt
-                batch = {"tokens": jnp.asarray(toks)}
-                if req.extra:
-                    batch.update(req.extra)
-                t0 = time.perf_counter()
-                prefill = self._prefill_fn(S_b, max_ctx)
-                logits, st1 = prefill(self.params, batch,
-                                      jnp.asarray([L], jnp.int32))
-                state = self._graft(state, st1, jnp.asarray(i, jnp.int32))
+                if admitting[i] is None and not active[i] \
+                        and slots[i] is None and queue:
+                    req = queue.popleft()
+                    admitting[i] = _Admission(
+                        req=req,
+                        cstate=M.make_prefill_chunk_state(
+                            cfg, 1, max_ctx, runtime=rt,
+                            chunk=self.prefill_chunk,
+                            gen_headroom=self.gen_headroom))
+                adm = admitting[i]
+                if adm is None:
+                    continue
+                L, C = len(adm.req.prompt), self.prefill_chunk
+                n = min(C, L - adm.consumed)
+                toks = np.zeros((1, C), np.int32)
+                toks[0, :n] = adm.req.prompt[adm.consumed:adm.consumed + n]
+                chunk, chunk_pe = self._chunk_fns(max_ctx)
+                extra = adm.req.extra or {}
+                if set(extra) == {"patch_embeds"}:
+                    adm.logits, adm.cstate = chunk_pe(
+                        self.params, adm.cstate, jnp.asarray(toks),
+                        jnp.asarray([n], jnp.int32), extra["patch_embeds"])
+                elif extra:     # uncompiled fallback for exotic extras
+                    adm.logits, adm.cstate = M.apply_prefill_chunk(
+                        self.params, cfg,
+                        {"tokens": jnp.asarray(toks), **extra},
+                        adm.cstate, runtime=rt,
+                        chunk_lens=jnp.asarray([n], jnp.int32))
+                else:
+                    adm.logits, adm.cstate = chunk(
+                        self.params, adm.cstate, jnp.asarray(toks),
+                        jnp.asarray([n], jnp.int32))
+                adm.consumed += n
+                if adm.consumed >= L:
+                    fin = self._finalize_fn(L, max_ctx)
+                    state = fin(state, adm.cstate, jnp.asarray(i, jnp.int32))
+                    adm.cstate = None
+                    admitting[i] = None
+                    completed.append((i, adm))
+
+            if completed:
+                # coalesced first-token sampling: ONE host sync for every
+                # request admitted this iteration
                 key, sub = jax.random.split(key)
-                tok = int(self._sample(logits, sub)[0])  # blocks until ready
-                metrics.prefill_s += time.perf_counter() - t0
-                req.ttft_s = time.perf_counter() - t_start
-                req.out_tokens.append(tok)
-                metrics.tokens_out += 1
-                metrics.ttft_s.append(req.ttft_s)
-                admit_t[i] = time.perf_counter()
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    finish(i, req)
-                    continue
-                slots[i] = req
-                active[i] = True
-                tokens[i] = tok
-                staged[i] = min(cfg.retro.local, max(S_b - cfg.retro.sink, 0))
-            if not active.any():
-                if not queue:
-                    break
-                continue
+                stacked = jnp.concatenate([a.logits for _, a in completed], 0)
+                first = self._sample(stacked, sub)      # blocks until ready
+                now = time.perf_counter()
+                upd = np.zeros(B, np.int32)
+                mask = np.zeros(B, bool)
+                for (i, adm), tok in zip(completed, first):
+                    req = adm.req
+                    req.ttft_s = now - t_start
+                    req.out_tokens.append(int(tok))
+                    metrics.tokens_out += 1
+                    metrics.ttft_s.append(req.ttft_s)
+                    admit_t[i] = now
+                    slots[i] = req
+                    active[i] = True
+                    upd[i], mask[i] = tok, True
+                    # device local_len after admission: chunked finalize uses
+                    # the true length; a padded blocking prefill uses S_b, but
+                    # _bucket only pads prompts with L >= sink + local, where
+                    # both give exactly ``local`` — the mirror matches either
+                    staged[i] = min(cfg.retro.local,
+                                    max(adm.consumed - cfg.retro.sink, 0))
+                    if len(req.out_tokens) >= req.max_new_tokens:
+                        finish(i, req)
+                tokens_dev = self._merge_tokens(tokens_dev, jnp.asarray(upd),
+                                                jnp.asarray(mask))
+            metrics.prefill_s += time.perf_counter() - t0
 
             # ---- one decode step over the whole slot batch -----------------
+            # Dispatch step t+1 BEFORE syncing step t's ids: sampling stays on
+            # device and the ids ride back one step late (the loop's only
+            # decode-path host sync).
             t0 = time.perf_counter()
-            logits, state = decode(self.params, state,
-                                   jnp.asarray(tokens, jnp.int32),
-                                   jnp.asarray(active))
-            key, sub = jax.random.split(key)
-            sampled = self._sample(logits, sub)     # blocks until ready
+            did_decode = False
+            if active.any():
+                key, sub = jax.random.split(key)
+                logits, state = decode(self.params, state, tokens_dev,
+                                       jnp.asarray(active))
+                new_sampled = self._sample_dev(logits, sub)  # device, no sync
+                snapshot = [slots[i] if active[i] else None for i in range(B)]
+                metrics.steps += 1
+                metrics.occupied_slot_steps += int(active.sum())
+                staged[active] += 1
+                did_decode = True
+
+            # ---- harvest step t's ids (one step lagged) --------------------
+            if prev_sampled is not None:
+                ids = np.asarray(prev_sampled)               # the only sync
+                now = time.perf_counter()
+                delivered = set()
+                for i, req in enumerate(prev_snapshot):
+                    if req is None or slots[i] is not req or req.done:
+                        continue        # freed/re-admitted: speculative token
+                    delivered.add(id(req))
+                    req.out_tokens.append(int(ids[i]))
+                    metrics.tokens_out += 1
+                    if len(req.out_tokens) >= req.max_new_tokens:
+                        finish(i, req)
+                if delivered:
+                    if last_deliver_t is not None and (delivered
+                                                       & last_deliver):
+                        metrics.step_s.append(now - last_deliver_t)
+                    last_deliver_t, last_deliver = now, delivered
+            if did_decode:
+                prev_sampled, prev_snapshot = new_sampled, snapshot
+                tokens_dev = new_sampled
+            else:
+                prev_sampled, prev_snapshot = None, [None] * B
             metrics.decode_s += time.perf_counter() - t0
-            metrics.steps += 1
-            metrics.occupied_slot_steps += int(active.sum())
-            staged[active] += 1
-            for i in range(B):
-                if not active[i]:
-                    continue
-                req = slots[i]
-                tok = int(sampled[i])
-                req.out_tokens.append(tok)
-                metrics.tokens_out += 1
-                tokens[i] = tok
-                if len(req.out_tokens) >= req.max_new_tokens:
-                    finish(i, req)
 
             # ---- per-row masked index update (off the per-step hot path) ---
             if use_flush and (staged >= lbuf).any():

@@ -136,6 +136,57 @@ def test_continuous_matches_solo_bitwise(setup):
         assert len(served.out_tokens) == n
 
 
+def test_chunked_admission_matches_blocking(setup):
+    """Acceptance: chunked (interleaved) admission reproduces blocking
+    admission token-for-token on a ragged queue, for both runtimes."""
+    params = setup[0]
+    rng = np.random.default_rng(3)
+    lens = [S, 256, 320, 200]
+    news = [20, 6, 41, 12]                  # 41 crosses a flush boundary
+    prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32) for L in lens]
+
+    for runtime in ("retro", "full"):
+        outs = {}
+        for mode in ("blocking", "chunked"):
+            eng = ServeEngine(CFG, params, runtime=runtime, gen_headroom=256,
+                              max_context=S, admission=mode, prefill_chunk=96)
+            reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+                    for p, n in zip(prompts, news)]
+            m = eng.serve(reqs, batch_size=2)
+            assert m.tokens_out == sum(news)
+            outs[mode] = [r.out_tokens for r in reqs]
+        assert outs["chunked"] == outs["blocking"], runtime
+
+
+def test_chunked_prefill_family_passthrough():
+    """encdec/hybrid/ssm pass through: the chunked API refuses and the engine
+    falls back to blocking admission for them."""
+    assert M.supports_chunked_prefill(CFG)
+    for family in ("hybrid", "ssm", "audio"):
+        fcfg = CFG.replace(family=family)
+        assert not M.supports_chunked_prefill(fcfg)
+        with pytest.raises(NotImplementedError, match="blocking"):
+            M.apply_prefill_chunk(None, fcfg, {}, None)
+        with pytest.raises(NotImplementedError):
+            M.make_prefill_chunk_state(fcfg, 1, 64, chunk=16)
+
+
+def test_serve_metrics_inter_token_latency(setup):
+    """ITL / TTFT percentiles are first-class serve metrics: gaps between
+    consecutive token deliveries of continuing requests are recorded."""
+    params = setup[0]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S, admission="chunked", prefill_chunk=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
+                    max_new_tokens=8) for _ in range(3)]
+    m = eng.serve(reqs, batch_size=2)
+    assert len(m.step_s) > 0
+    assert 0 < m.itl_p50_s <= m.itl_p99_s
+    assert 0 < m.ttft_p50_s <= m.ttft_p99_s
+    assert m.tokens_out == 3 * 8
+
+
 def test_engine_runs_across_flush_boundary(setup):
     """Generation longer than update_segment exercises the engine flush."""
     params = setup[0]

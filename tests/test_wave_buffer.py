@@ -25,15 +25,45 @@ def test_miss_then_hit():
 
 def test_no_hit_before_async_update():
     """Deferred update: a repeated miss before apply_updates stays a miss but
-    still returns correct data (paper: access decoupled from update)."""
+    still returns correct data (paper: access decoupled from update) — served
+    from the pending set, NOT refetched over the link."""
     buf, host = _mk()
     buf.assemble(np.array([1]))
+    per = buf.bytes_per_cluster
+    assert buf.stats.bytes_over_link == per
     out = buf.assemble(np.array([1]))     # update not applied yet
     np.testing.assert_array_equal(out, host[[1]])
     assert buf.stats.hits == 0
+    assert buf.stats.pending_hits == 1
+    assert buf.stats.bytes_over_link == per      # no double fetch
     buf.apply_updates()
     buf.assemble(np.array([1]))
     assert buf.stats.hits == 1
+
+
+def test_repeat_miss_not_double_counted():
+    """Regression: a cluster missed TWICE before apply_updates used to be
+    fetched over the link twice and double-counted in bytes_over_link; repeat
+    misses are served from the pending set and admitted exactly once."""
+    buf, host = _mk(n_clusters=32, cache=8)
+    per = buf.bytes_per_cluster
+    out = buf.assemble(np.array([3, 5]))
+    np.testing.assert_array_equal(out, host[[3, 5]])
+    out = buf.assemble(np.array([5, 3, 7]))      # 5, 3 pending; 7 fresh
+    np.testing.assert_array_equal(out, host[[5, 3, 7]])
+    assert buf.stats.bytes_over_link == 3 * per  # 3, 5, 7 fetched once each
+    assert buf.stats.pending_hits == 2
+    assert buf.stats.misses == 5                 # still misses, not cache hits
+    buf.apply_updates()
+    owners = buf.cache_owner[buf.cache_owner >= 0]
+    assert len(np.unique(owners)) == len(owners)
+    for cid in (3, 5, 7):
+        assert buf.table.cache_slot[cid] >= 0
+    buf.assemble(np.array([3, 5, 7]))
+    assert buf.stats.hits == 3
+    # pending set cleared by apply_updates: a new miss refetches over the link
+    buf.assemble(np.array([9]))
+    assert buf.stats.bytes_over_link == 4 * per
 
 
 def test_lru_eviction_order():

@@ -6,8 +6,11 @@ import pytest
 
 from repro.configs.base import RetroConfig
 from repro.core.clustering import segmented_cluster, spherical_kmeans
-from repro.core.wave_index import (append_token, flush_segment, max_clusters,
-                                   maybe_flush, prefill_build, prefill_layout)
+from repro.core.wave_index import (append_token, flush_segment,
+                                   init_chunked_prefill, max_clusters,
+                                   maybe_flush, prefill_append_chunk,
+                                   prefill_build, prefill_finalize,
+                                   prefill_layout)
 from repro.core.zones import plan_zones
 from repro.data.pipeline import clustered_keys
 
@@ -226,6 +229,100 @@ def test_per_row_masked_flush():
     after_row1 = jax.tree.map(lambda a: np.asarray(a[1]), out)
     for name, a, b in zip(out._fields, before_row1, after_row1):
         np.testing.assert_array_equal(a, b, err_msg=name)
+
+
+def _feed_chunks(cp, k, v, C, jit=False):
+    """Stream (B, n, H, hd) K/V through prefill_append_chunk in C-sized
+    chunks (last chunk right-padded)."""
+    B, n, H, hd = k.shape
+    app = prefill_append_chunk
+    if jit:
+        app = jax.jit(lambda cp, kc, vc, cl: prefill_append_chunk(
+            cp, kc, vc, RETRO, cl))
+    t = 0
+    while t < n:
+        c = min(C, n - t)
+        kc = jnp.zeros((B, C, H, hd), k.dtype).at[:, :c].set(k[:, t:t + c])
+        vc = jnp.zeros((B, C, H, hd), v.dtype).at[:, :c].set(v[:, t:t + c])
+        cl = jnp.full((B,), c, jnp.int32)
+        cp = app(cp, kc, vc, cl) if jit else app(cp, kc, vc, RETRO, cl)
+        t += c
+    return cp
+
+
+def _assert_states_equal(out, ref):
+    for f, a, b in zip(out._fields, out, ref):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f)
+
+
+@pytest.mark.parametrize("chunk", (96, 256, 300, 1100))
+def test_chunked_prefill_matches_build_exactly(chunk):
+    """Acceptance: streaming the prompt through prefill_append_chunk +
+    prefill_finalize reproduces prefill_build BIT-IDENTICALLY for any chunk
+    split — segment boundaries are position-aligned, not chunk-aligned."""
+    ref, k, v = _build()
+    B, n, H, hd = k.shape
+    M = ref.k_store.shape[2]
+    cp = init_chunked_prefill(B, H, hd, M, RETRO, chunk, dtype=jnp.float32)
+    cp = _feed_chunks(cp, k, v, chunk, jit=(chunk == 256))
+    out = prefill_finalize(cp, RETRO, n)
+    _assert_states_equal(out, ref)
+
+
+def test_chunked_prefill_per_row_rates():
+    """Rows of one batch may stream at different rates (per-row chunk_lens);
+    once they converge to the same total the state matches the monolithic
+    build row-for-row."""
+    B, n, H, hd = 2, 1100, 1, 32
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    M = max_clusters(n, RETRO, gen_headroom=128)
+    ref = prefill_build(k, v, RETRO, M, dtype=jnp.float32)
+
+    C = 128
+    cp = init_chunked_prefill(B, H, hd, M, RETRO, C, dtype=jnp.float32)
+    t = np.zeros(B, int)
+    rng2 = np.random.default_rng(1)
+    while (t < n).any():
+        cl = np.minimum(rng2.integers(0, C + 1, B), n - t)
+        kc = jnp.zeros((B, C, H, hd), jnp.float32)
+        vc = jnp.zeros((B, C, H, hd), jnp.float32)
+        for b in range(B):
+            kc = kc.at[b, :cl[b]].set(k[b, t[b]:t[b] + cl[b]])
+            vc = vc.at[b, :cl[b]].set(v[b, t[b]:t[b] + cl[b]])
+        cp = prefill_append_chunk(cp, kc, vc, RETRO,
+                                  jnp.asarray(cl, jnp.int32))
+        t += cl
+    out = prefill_finalize(cp, RETRO, n)
+    _assert_states_equal(out, ref)
+
+
+def test_chunked_prefill_short_prompt():
+    """A streamed prompt shorter than sink + local finalizes to the same
+    steady-zone-only state as the monolithic build."""
+    B, n, H, hd = 1, 20, 1, 16
+    rng = np.random.default_rng(3)
+    k = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    M = max_clusters(n, RETRO, gen_headroom=128)
+    ref = prefill_build(k, k, RETRO, M, dtype=jnp.float32)
+    cp = init_chunked_prefill(B, H, hd, M, RETRO, 16, dtype=jnp.float32)
+    cp = _feed_chunks(cp, k, k, 16)
+    out = prefill_finalize(cp, RETRO, n)
+    _assert_states_equal(out, ref)
+    assert int(out.n_clusters[0]) == 0
+    assert int(out.local_len[0]) == n - RETRO.sink
+
+
+def test_chunked_finalize_rejects_sink_only_prompt():
+    """Same contract as prefill_build: a prompt that cannot overfill the
+    fixed-width sink zone is refused."""
+    cp = init_chunked_prefill(1, 1, 16, 256, RETRO, 4, dtype=jnp.float32)
+    k = jnp.zeros((1, 4, 1, 16), jnp.float32)
+    cp = prefill_append_chunk(cp, k, k, RETRO)
+    with pytest.raises(ValueError, match="sink"):
+        prefill_finalize(cp, RETRO, RETRO.sink)
 
 
 def test_kmeans_clusters_separable_data():
