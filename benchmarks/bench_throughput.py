@@ -7,11 +7,13 @@ The paper's 4.4x at 120K comes precisely from this bytes reduction.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit, tiny_retro
+from benchmarks.common import cost_bytes, emit, timeit, tiny_retro
 from repro.core.attention import (DenseCache, dense_cache_append,
                                   full_attention_decode,
                                   wave_attention_decode)
@@ -75,11 +77,11 @@ def _serve_ragged(cfg, params, prompts, news, mode: str, warm: bool = True):
     return m, [r.out_tokens for r in reqs]
 
 
-def compare_admission(quick: bool = False, out_path: str = None) -> dict:
+def compare_admission(quick: bool = False) -> dict:
     """Chunked vs blocking admission on the same ragged queue: same outputs,
     lower p99 inter-token latency under concurrent admission (chunked never
-    stalls decode longer than one prefill chunk). Optionally writes the
-    result as a JSON artifact (``benchmarks/run.py --quick``)."""
+    stalls decode longer than one prefill chunk). ``benchmarks/run.py
+    --quick`` merges the result into the BENCH_throughput.json artifact."""
     cfg, params, prompts, news = _ragged_setup(quick)
     result = {"scenario": "ragged_continuous", "slots": 2,
               "requests": len(prompts), "prefill_chunk": 64, "modes": {}}
@@ -106,12 +108,88 @@ def compare_admission(quick: bool = False, out_path: str = None) -> dict:
     c99 = result["modes"]["chunked"]["itl_p99_ms"]
     result["itl_p99_blocking_over_chunked"] = \
         round(b99 / c99, 2) if c99 > 0 else None
-    if out_path:
-        import json
-        with open(out_path, "w") as f:
-            json.dump(result, f, indent=2)
-            f.write("\n")
     return result
+
+
+def compare_attn_impl(quick: bool = False) -> dict:
+    """jnp vs fused (gather-free paged kernel) decode attention.
+
+    Measures the jitted hot-path decode step (``decode_step_split`` with
+    ``unroll=True`` — the engine-perf measurement vehicle of this repo's
+    §Perf iterations, which reads the cold cluster stores in place):
+    per-step wall-clock p50/p99 and XLA ``cost_analysis`` bytes-accessed,
+    plus greedy token-for-token equality between the two impls. The fused
+    path eliminates the (B, H, r, cap, hd) cluster gather temp and the
+    execution-buffer concat, so its bytes-accessed drops — most visibly when
+    the retrieval zone covers a large cluster fraction (the full-store gather
+    charge is amortized; on TPU the kernel reads only the r blocks).
+    """
+    from repro.configs.base import AttnConfig, InputShape, ModelConfig, RetroConfig
+    from repro.configs.registry import materialize_batch
+    from repro.models import model as M
+    from repro.models.transformer import decode_step_split, split_state
+
+    retro = RetroConfig(avg_cluster=16, cluster_cap=32, prefill_segment=256,
+                        update_segment=64, sink=4, local=64, kmeans_iters=3,
+                        retrieval_frac=0.35, estimation_frac=0.232)
+    cfg = ModelConfig(
+        arch_id="attn-impl-bench", family="dense", n_layers=2, d_model=64,
+        d_ff=128, vocab=256,
+        attn=AttnConfig(n_heads=4, n_kv_heads=2, head_dim=32),
+        dtype="float32", retro=retro)
+    S, B = 2048, 2
+    n_steps = 12 if quick else 32
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = materialize_batch(cfg, InputShape("p", S, B, "prefill"))
+    plan = plan_zones(S, retro, 256)
+    _, st = M.apply_prefill(params, cfg, batch, runtime="retro", plan=plan,
+                            gen_headroom=256)
+    cold, hot0 = split_state(st.kv)
+    cold_layers = [jax.tree.map(lambda a, i=i: a[i], cold)
+                   for i in range(cfg.n_layers)]
+
+    result = {"scenario": "split_decode_step", "seq_len": S, "batch": B,
+              "plan": {"r": plan.r, "e": plan.e, "m_max": plan.m_max,
+                       "cluster_cap": retro.cluster_cap}, "modes": {}}
+    outs = {}
+    for impl in ("jnp", "fused"):
+        def dec(p, h, t, *cl, impl=impl):
+            return decode_step_split(p, cfg, list(cl), h, t, plan=plan,
+                                     unroll=True, attn_impl=impl)
+        fn = jax.jit(dec)
+        bytes_per_step = cost_bytes(
+            fn.lower(params, hot0, jnp.zeros((B,), jnp.int32),
+                     *cold_layers).compile())
+
+        hot, tok = hot0, jnp.zeros((B,), jnp.int32)
+        lat, toks = [], []
+        for i in range(n_steps):
+            t0 = time.perf_counter()
+            lg, hot = fn(params, hot, tok, *cold_layers)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            tok.block_until_ready()
+            if i > 0:                       # step 0 pays compile/cache warmup
+                lat.append(time.perf_counter() - t0)
+            toks.append(np.asarray(tok).tolist())
+        outs[impl] = toks
+        result["modes"][impl] = {
+            "step_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "step_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "bytes_accessed_per_step": int(bytes_per_step),
+        }
+        emit(f"attn_impl_{impl}", float(np.mean(lat)) * 1e6,
+             f"bytes_per_step={int(bytes_per_step)};"
+             f"p99_ms={np.percentile(lat, 99) * 1e3:.2f}")
+    bj = result["modes"]["jnp"]["bytes_accessed_per_step"]
+    bf = result["modes"]["fused"]["bytes_accessed_per_step"]
+    result["bytes_drop_frac"] = round(1.0 - bf / bj, 4) if bj else None
+    result["outputs_equal"] = outs["jnp"] == outs["fused"]
+    return result
+
+
+def run_attn_impl():
+    """jnp-vs-fused decode attention comparison (CSV flavor)."""
+    compare_attn_impl(quick=False)
 
 
 def run_ragged_continuous():

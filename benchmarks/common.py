@@ -26,6 +26,15 @@ def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
+def cost_bytes(compiled) -> float:
+    """XLA 'bytes accessed' of a ``jit(...).lower(...).compile()`` result
+    (jax returns a dict, or a list of per-device dicts on some versions)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0.0))
+
+
 def emit(name: str, us: float, derived) -> None:
     row = f"{name},{us:.1f},{derived}"
     ROWS.append(row)

@@ -1,8 +1,10 @@
 # One benchmark per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 #
-# ``--quick`` runs only the continuous-serving smoke comparison (chunked vs
-# blocking admission on the same ragged queue) and writes the result to a
-# ``BENCH_throughput.json`` artifact so the perf trajectory is recorded per PR.
+# ``--quick`` runs the continuous-serving smoke comparison (chunked vs
+# blocking admission on the same ragged queue) plus the jnp-vs-fused decode
+# attention comparison (per-step latency p50/p99 + cost_analysis bytes) and
+# writes both to a ``BENCH_throughput.json`` artifact so the perf trajectory
+# is recorded per PR.
 from __future__ import annotations
 
 import json
@@ -17,13 +19,20 @@ def main() -> None:
         from benchmarks import bench_throughput
         print("name,us_per_call,derived")
         t0 = time.time()
-        res = bench_throughput.compare_admission(
-            quick=True, out_path="BENCH_throughput.json")
+        res = bench_throughput.compare_admission(quick=True)
+        res["attn_impl"] = bench_throughput.compare_attn_impl(quick=True)
+        with open("BENCH_throughput.json", "w") as f:
+            json.dump(res, f, indent=2)
+            f.write("\n")
         print(f"# quick smoke done in {time.time() - t0:.1f}s "
               f"-> BENCH_throughput.json", flush=True)
         print(json.dumps(res, indent=2))
         assert res["outputs_equal"], \
             "chunked admission changed outputs vs blocking"
+        assert res["attn_impl"]["outputs_equal"], \
+            "fused attention changed outputs vs jnp"
+        assert res["attn_impl"]["bytes_drop_frac"] > 0, \
+            "fused decode step did not reduce bytes accessed"
         return
 
     from benchmarks import (bench_accuracy_budget, bench_cache,
@@ -35,6 +44,7 @@ def main() -> None:
         ("fig19a_estimation", bench_estimation.run),
         ("fig19b_segment_size", bench_segment_size.run),
         ("fig13_decode_throughput", bench_throughput.run),
+        ("attn_impl_jnp_vs_fused", bench_throughput.run_attn_impl),
         ("fig16_wave_buffer", bench_cache.run),
         ("fig15_prefill_overhead", bench_prefill.run),
         ("fig17b_long_generation", bench_longgen.run),

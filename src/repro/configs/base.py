@@ -58,6 +58,10 @@ class RetroConfig:
     centering: bool = True                   # MagicPIG-style mean centering
     distributed_retrieval: bool = False      # beyond-paper: local top-k + LSE psum
     serial_prefill_segments: bool = False    # lax.map segments (peak-mem iter)
+    # decode-attention impl: "jnp" (reference execution-buffer path) or
+    # "fused" (gather-free paged Pallas kernel, Sec. 4.6; interpret-mode on
+    # CPU). Engines/launchers may override per run.
+    attn_impl: str = "jnp"
 
     def n_clusters(self, seq_len: int) -> int:
         return max(1, seq_len // self.avg_cluster)

@@ -71,6 +71,112 @@ def _gather_clusters(state: WaveState, idx: jax.Array):
     return (take(state.k_store), take(state.v_store), take(state.pos_store))
 
 
+def _estimation_zone(state: WaveState, cs, idx_r, idx_e, *,
+                     use_estimation: bool, overflow_correction: bool):
+    """Estimation-zone inputs for the fused merge (shared by every impl).
+
+    cs: (B, H, G, M) centroid scores; idx_r/idx_e: (B, H, r/e) cluster ids.
+    Returns (est_logit, cs_e (B, H, G, E), vs_e (B, H, E, hd)) — all O(meta
+    index)-sized: the only cluster-store-sized tensors of the decode step are
+    the stores themselves.
+    """
+    B, Hkv = cs.shape[:2]
+    hd = state.vsum.shape[-1]
+    e = idx_e.shape[2]
+    if use_estimation and e > 0:
+        cs_e = jnp.take_along_axis(cs, idx_e[:, :, None, :], axis=3)   # (B,H,G,e)
+        sz_e = jnp.take_along_axis(state.size, idx_e, axis=2)          # (B,H,e)
+        vs_e = jnp.take_along_axis(
+            state.vsum, idx_e[..., None], axis=2)                      # (B,H,e,hd)
+        log_sz = jnp.log(jnp.maximum(sz_e.astype(jnp.float32), 1.0))
+        est_logit = cs_e + log_sz[:, :, None, :]                       # s_i·exp(cs)
+        est_valid = sz_e > 0
+        est_logit = jnp.where(est_valid[:, :, None, :], est_logit, NEG)
+    else:
+        est_logit = jnp.full((B, Hkv, cs.shape[2], 1), NEG, jnp.float32)
+        cs_e = est_logit
+        vs_e = jnp.zeros((B, Hkv, 1, hd), jnp.float32)
+
+    # overflow correction: tokens dropped from retrieved stores (size > cap)
+    # re-enter through their cluster's estimate, scaled by the dropped fraction.
+    if overflow_correction and use_estimation and idx_r.shape[2] > 0:
+        cs_r = jnp.take_along_axis(cs, idx_r[:, :, None, :], axis=3)   # (B,H,G,r)
+        sz_r = jnp.take_along_axis(state.size, idx_r, axis=2)
+        st_r = jnp.take_along_axis(state.stored, idx_r, axis=2)
+        vs_r = jnp.take_along_axis(state.vsum, idx_r[..., None], axis=2)
+        over = jnp.maximum(sz_r - st_r, 0).astype(jnp.float32)         # (B,H,r)
+        frac = over / jnp.maximum(sz_r.astype(jnp.float32), 1.0)
+        log_over = jnp.where(over > 0, jnp.log(jnp.maximum(over, 1.0)), NEG)
+        ov_logit = cs_r + log_over[:, :, None, :]
+        est_logit = jnp.concatenate([est_logit, ov_logit], axis=3)
+        cs_e = jnp.concatenate([cs_e, cs_r], axis=3)
+        vs_e = jnp.concatenate([vs_e, vs_r * frac[..., None]], axis=2)
+    return est_logit, cs_e, vs_e
+
+
+ATTN_IMPLS = ("jnp", "fused", "pallas")
+
+
+def resolve_attn_impl(impl: Optional[str]) -> str:
+    """Normalize an attention-impl selection. ``None`` -> "jnp"; "fused"
+    (paged gather-free kernel) auto-resolves to the interpretable path on CPU
+    inside the kernel wrapper; "pallas" is the legacy gathered-buffer kernel."""
+    impl = impl or "jnp"
+    if impl not in ATTN_IMPLS:
+        raise ValueError(f"unknown attn impl {impl!r}; expected {ATTN_IMPLS}")
+    return impl
+
+
+def _local_positions(state: WaveState):
+    """Absolute position of every local-buffer slot, -1 for empty. (B, lbuf)."""
+    lbuf = state.local_k.shape[2]
+    l0 = state.length - state.local_len              # (B,) abs pos of buffer[0]
+    local_pos = l0[:, None] + jnp.arange(lbuf, dtype=jnp.int32)[None, :]
+    return jnp.where(jnp.arange(lbuf)[None, :] < state.local_len[:, None],
+                     local_pos, -1)                  # (B, lbuf)
+
+
+def _fused_wave_attention(qg, state: WaveState, idx_r, est_logit, cs_e, vs_e,
+                          *, window, softcap):
+    """Gather-free decode merge: hand the raw zones to the paged Pallas
+    kernel (``kernels.wave_attention``), which walks sink -> local buffer ->
+    the r retrieved clusters IN PLACE via scalar-prefetched ids and folds the
+    estimation zone into the same online softmax. No (B, H, r, cap, hd)
+    gather temp, no execution-buffer concat."""
+    from repro.kernels.wave_attention import ops as wa_ops
+    B, Hkv, G, hd = qg.shape
+    r = idx_r.shape[2]
+    q_pos = state.length - 1                                   # (B,)
+
+    # per-row validity bounds: pos <= hi (= q_pos) and pos > lo. ``lo`` folds
+    # the sliding window: for integer positions p, p > q_pos - window (the
+    # f32 comparison of the jnp path) <=> p > floor(q_pos - window).
+    hi = q_pos.astype(jnp.int32)
+    if window is None:
+        lo = jnp.full_like(hi, -1)
+    else:
+        lo = jnp.floor(q_pos.astype(jnp.float32)
+                       - jnp.asarray(window, jnp.float32)).astype(jnp.int32)
+        lo = jnp.maximum(lo, -1)
+    rowb = jnp.broadcast_to(
+        jnp.stack([lo, hi], axis=-1)[:, None, :], (B, Hkv, 2))
+
+    local_pos = jnp.broadcast_to(_local_positions(state)[:, None, :],
+                                 (B, Hkv, state.local_k.shape[2]))
+    if r == 0:            # steady-zone-only plan: pad one dead retrieval slot
+        idx_k = jnp.zeros((B, Hkv, 1), jnp.int32)
+        live = jnp.zeros((B, Hkv, 1), jnp.int32)
+    else:
+        idx_k = idx_r
+        live = jnp.ones((B, Hkv, r), jnp.int32)
+
+    return wa_ops.paged_wave_attention(
+        qg, state.sink_k, state.sink_v, state.local_k, state.local_v,
+        local_pos, state.k_store, state.v_store, state.pos_store, idx_k,
+        live, rowb, est_logit, cs_e, vs_e, softcap=softcap,
+        interpret=wa_ops.on_cpu())
+
+
 def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
                           plan: ZonePlan, *, window: Optional[jax.Array] = None,
                           softcap: Optional[float] = None,
@@ -83,6 +189,11 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
 
     q: (B, Hq, hd) — query at position state.length - 1 (the current token's
     K/V must already be appended to the local buffer).
+
+    ``impl``: "jnp" (reference execution-buffer path), "fused" (gather-free
+    paged Pallas kernel — zones read in place, interpret mode on CPU), or
+    "pallas" (legacy gathered-buffer kernel). ``return_parts`` and sharded
+    retrieval always use the reference path.
 
     Sharded-retrieval hooks (core.distributed): ``cluster_offset`` maps local
     cluster ids to global for validity; ``include_steady`` (may be traced)
@@ -97,10 +208,23 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     scale = 1.0 / math.sqrt(hd)
     q_pos = state.length - 1                               # (B,) per-row
     qg = q.reshape(B, Hkv, G, hd)
+    impl = resolve_attn_impl(impl)
 
     cs, idx_re = rank_clusters(qg, state, plan, window, softcap,
                                cluster_offset)
     idx_r, idx_e = idx_re[:, :, :plan.r], idx_re[:, :, plan.r:]
+
+    est_logit, cs_e, vs_e = _estimation_zone(
+        state, cs, idx_r, idx_e, use_estimation=use_estimation,
+        overflow_correction=overflow_correction)
+
+    # ---- gather-free paged kernel: zones handed over unconcatenated --------
+    # (the sharded return_parts merge keeps the reference path: partial
+    # (num, den, m) are what shards LSE-combine, see core.distributed)
+    if impl == "fused" and not return_parts and include_steady is True:
+        out = _fused_wave_attention(qg, state, idx_r, est_logit, cs_e, vs_e,
+                                    window=window, softcap=softcap)
+        return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx_r)
 
     # ---- execution buffer: steady zone + retrieved blocks ------------------
     kb, vb, pb = _gather_clusters(state, idx_r)            # (B,H,r,cap,hd)
@@ -111,11 +235,8 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     sink_pos = jnp.broadcast_to(jnp.arange(retro.sink, dtype=jnp.int32),
                                 (B, Hkv, retro.sink))
     lbuf = state.local_k.shape[2]
-    l0 = state.length - state.local_len                    # (B,) abs pos of buffer[0]
-    local_pos = l0[:, None] + jnp.arange(lbuf, dtype=jnp.int32)[None, :]
-    local_pos = jnp.where(jnp.arange(lbuf)[None, :] < state.local_len[:, None],
-                          local_pos, -1)                   # (B, lbuf)
-    local_pos = jnp.broadcast_to(local_pos[:, None, :], (B, Hkv, lbuf))
+    local_pos = jnp.broadcast_to(_local_positions(state)[:, None, :],
+                                 (B, Hkv, lbuf))
 
     k_exec = jnp.concatenate([state.sink_k, state.local_k, k_ret], axis=2)
     v_exec = jnp.concatenate([state.sink_v, state.local_v, v_ret], axis=2)
@@ -130,38 +251,6 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
         n_steady = retro.sink + lbuf
         is_steady = jnp.arange(p_exec.shape[2]) < n_steady
         ok = ok & (jnp.asarray(include_steady) | ~is_steady)
-
-    # ---- estimation zone ----------------------------------------------------
-    if use_estimation and plan.e > 0:
-        cs_e = jnp.take_along_axis(cs, idx_e[:, :, None, :], axis=3)   # (B,H,G,e)
-        sz_e = jnp.take_along_axis(state.size, idx_e, axis=2)          # (B,H,e)
-        vs_e = jnp.take_along_axis(
-            state.vsum, idx_e[..., None], axis=2)                      # (B,H,e,hd)
-        log_sz = jnp.log(jnp.maximum(sz_e.astype(jnp.float32), 1.0))
-        est_logit = cs_e + log_sz[:, :, None, :]                       # s_i·exp(cs)
-        est_valid = sz_e > 0
-        est_logit = jnp.where(est_valid[:, :, None, :], est_logit, NEG)
-    else:
-        est_logit = jnp.full((B, Hkv, G, 1), NEG, jnp.float32)
-        cs_e = est_logit
-        vs_e = jnp.zeros((B, Hkv, 1, hd), jnp.float32)
-        sz_e = jnp.zeros((B, Hkv, 1), jnp.int32)
-
-    # overflow correction: tokens dropped from retrieved stores (size > cap)
-    # re-enter through their cluster's estimate, scaled by the dropped fraction.
-    if overflow_correction and use_estimation:
-        cs_r = jnp.take_along_axis(cs, idx_r[:, :, None, :], axis=3)   # (B,H,G,r)
-        sz_r = jnp.take_along_axis(state.size, idx_r, axis=2)
-        st_r = jnp.take_along_axis(state.stored, idx_r, axis=2)
-        vs_r = jnp.take_along_axis(state.vsum, idx_r[..., None], axis=2)
-        over = jnp.maximum(sz_r - st_r, 0).astype(jnp.float32)         # (B,H,r)
-        frac = over / jnp.maximum(sz_r.astype(jnp.float32), 1.0)
-        log_over = jnp.where(over > 0, jnp.log(jnp.maximum(over, 1.0)), NEG)
-        ov_logit = cs_r + log_over[:, :, None, :]
-        est_logit = jnp.concatenate([est_logit, ov_logit], axis=3)
-        cs_e = jnp.concatenate([cs_e, cs_r], axis=3)
-        vs_e = jnp.concatenate([vs_e, vs_r * frac[..., None]], axis=2)
-        sz_e = jnp.concatenate([sz_e, over.astype(jnp.int32)], axis=2)
 
     if return_parts:
         num, den, m = tripartite_merge_parts_jnp(
@@ -250,21 +339,31 @@ def dense_cache_append(cache: DenseCache, k_new, v_new,
     (B,) bool — inactive rows (free continuous-batching slots) are untouched.
     Right-padded ragged prefills stay correct: appends overwrite the pad slots
     just past each row's true length, so ``pos < length`` only ever admits
-    real tokens."""
-    def row(buf, new, idx):
-        return jax.lax.dynamic_update_slice(buf, new, (0, idx, 0))
+    real tokens.
 
-    new_k = jax.vmap(row)(cache.k, k_new[:, :, None, :].astype(cache.k.dtype),
-                          cache.length)
-    new_v = jax.vmap(row)(cache.v, v_new[:, :, None, :].astype(cache.v.dtype),
-                          cache.length)
+    The mask is applied to the per-row write CURSOR, not the cache: an
+    inactive row routes its write out of range, which the dropped scatter
+    discards — O(token) per step, in place on the donated cache. The previous
+    ``jnp.where(active, new, cache)`` select read AND wrote the full cache
+    every step (§Perf: asserted via cost_analysis in tests). A row at
+    capacity likewise drops the append instead of clobbering its last slot —
+    and its cursor stays put, so ``length`` never claims tokens the cache
+    doesn't hold.
+    """
+    S_max = cache.k.shape[2]
+    idx = cache.length
     step = jnp.ones_like(cache.length)
     if active is not None:
         act = jnp.asarray(active)
-        sel = act[:, None, None, None]
-        new_k = jnp.where(sel, new_k, cache.k)
-        new_v = jnp.where(sel, new_v, cache.v)
+        idx = jnp.where(act, idx, S_max)       # out of range => dropped write
         step = act.astype(cache.length.dtype)
+    step = jnp.where(cache.length < S_max, step, 0)
+
+    def row(buf, new, i):
+        return buf.at[:, i].set(new.astype(buf.dtype), mode="drop")
+
+    new_k = jax.vmap(row)(cache.k, k_new, idx)
+    new_v = jax.vmap(row)(cache.v, v_new, idx)
     return DenseCache(new_k, new_v, cache.length + step)
 
 

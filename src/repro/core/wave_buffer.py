@@ -177,9 +177,13 @@ class WaveBuffer:
         return np.asarray(victims, dtype=np.int64)
 
     def _admit(self, cluster_ids: np.ndarray, payload: np.ndarray):
-        # dedupe (a cluster may be requested twice before updates apply)
-        cluster_ids, uniq = np.unique(cluster_ids, return_index=True)
-        payload = payload[uniq]
+        # dedupe (a cluster may be requested twice before updates apply) in
+        # FIRST-REQUESTED order: np.unique re-sorts by cluster id, so a
+        # capacity clip below would drop by id rather than request order —
+        # re-sorting the unique indices restores arrival order.
+        _, uniq = np.unique(cluster_ids, return_index=True)
+        uniq = np.sort(uniq)
+        cluster_ids, payload = cluster_ids[uniq], payload[uniq]
         fresh = self.table.cache_slot[cluster_ids] < 0
         cluster_ids, payload = cluster_ids[fresh], payload[fresh]
         if len(cluster_ids) == 0:

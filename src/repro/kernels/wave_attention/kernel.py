@@ -1,8 +1,10 @@
-"""Pallas TPU kernel: fused tripartite wave attention (decode step).
+"""Pallas TPU kernels: fused tripartite wave attention (decode step).
 
-The paper modifies FlashAttention to (a) run over the gathered execution
-buffer (steady zone + retrieved cluster blocks) and (b) merge the centroid
-estimation zone into the same online softmax (Sec. 4.6). TPU adaptation:
+The paper modifies FlashAttention to (a) run over the retrieved KV blocks
+(steady zone + retrieval zone) and (b) merge the centroid estimation zone
+into the same online softmax (Sec. 4.6). Two TPU adaptations live here:
+
+``wave_attention_pallas`` — the original gathered-buffer kernel:
 
 * grid = (B*Hkv, T_blocks): each step streams one (Tb, hd) K/V tile
   HBM->VMEM; the (G, hd) query tile and (G,) running (m, l) plus the (G, hd)
@@ -11,6 +13,13 @@ estimation zone into the same online softmax (Sec. 4.6). TPU adaptation:
   in at the *last* grid step, re-using the same max-stabilized merge; this is
   the "weighted attention" modification of the paper's FlashAttention kernel.
 * hd / Tb / E are padded by ops.py to MXU/VPU-friendly multiples (128 lanes).
+
+``paged_wave_attention_pallas`` — the gather-free paged kernel (see
+README.md): same online softmax, but the retrieved clusters are read from
+``k_store``/``v_store`` IN PLACE via scalar-prefetched cluster ids driving the
+BlockSpec index maps (the paged-attention idiom of ``kernels/gather``) — the
+caller never materializes a (B, H, r, cap, hd) gather temp nor an
+execution-buffer concat.
 
 Validated on CPU with interpret=True against ``ref.tripartite_merge_jnp``.
 """
@@ -116,3 +125,164 @@ def wave_attention_pallas(q, k, v, valid, est_logit, cs, vs, *,
         ],
         interpret=interpret,
     )(q, k, v, valid, est_logit, cs, vs)
+
+
+# ---------------------------------------------------------------------------
+# Gather-free paged kernel: steady zone + in-place retrieved clusters.
+# ---------------------------------------------------------------------------
+
+
+def _paged_kernel(idx_ref, rowb_ref, live_ref,
+                  q_ref, sk_ref, sv_ref, lk_ref, lv_ref, lp_ref,
+                  kst_ref, vst_ref, pst_ref, el_ref, cs_ref, vs_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *,
+                  softcap, scale, sink, n_local_blocks, nblocks):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                # (G, hd)
+    lo = rowb_ref[b, 0]                             # window lower bound (excl)
+    hi = rowb_ref[b, 1]                             # q_pos (incl)
+
+    def fold(k, v, pos, extra_ok=True):
+        """Online-softmax accumulate of one (T, hd) tile; pos: (1, T) int32
+        token positions (-1 = empty slot)."""
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        ok = (pos >= 0) & (pos <= hi) & (pos > lo) & extra_ok   # (1, T)
+        s = jnp.where(ok, s, NEG)                   # (G, T)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev[:, 0], jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -1e20)
+        corr = jnp.where(jnp.isfinite(m_prev[:, 0]),
+                         jnp.exp(m_prev[:, 0] - m_safe), 0.0)
+        p = jnp.exp(s - m_safe[:, None])
+        p = jnp.where(ok, p, 0.0)
+        l_scr[...] = (l_scr[...] * corr[:, None]
+                      + jnp.sum(p, axis=-1, keepdims=True))
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_scr[...] = m_new[:, None]
+
+    @pl.when(j == 0)
+    def _fold_sink():
+        # sink positions are implicit: slot t holds token t; ops.py pads the
+        # sink axis, so slots >= the true sink width are statically dead
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, sk_ref.shape[1]), 1)
+        fold(sk_ref[0].astype(jnp.float32), sv_ref[0].astype(jnp.float32),
+             pos, extra_ok=pos < sink)
+
+    @pl.when((j >= 1) & (j < 1 + n_local_blocks))
+    def _fold_local():
+        fold(lk_ref[0].astype(jnp.float32), lv_ref[0].astype(jnp.float32),
+             lp_ref[...])
+
+    @pl.when(j >= 1 + n_local_blocks)
+    def _fold_cluster():
+        jc = j - (1 + n_local_blocks)
+        fold(kst_ref[0, 0].astype(jnp.float32),
+             vst_ref[0, 0].astype(jnp.float32),
+             pst_ref[0], extra_ok=live_ref[b, jc] > 0)
+
+    @pl.when(j == nblocks - 1)
+    def _finalize():
+        est_logit = el_ref[0]                       # (G, E)
+        cs = cs_ref[0]                              # (G, E)
+        vs = vs_ref[0]                              # (E, hd)
+        m_prev = m_scr[...][:, 0]
+        m_fin = jnp.maximum(jnp.maximum(m_prev, jnp.max(est_logit, axis=-1)),
+                            -1e20)
+        corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_fin), 0.0)
+        live = est_logit > NEG / 2
+        w_den = jnp.where(live, jnp.exp(est_logit - m_fin[:, None]), 0.0)
+        w_num = jnp.where(live, jnp.exp(cs - m_fin[:, None]), 0.0)
+        den = l_scr[...][:, 0] * corr + jnp.sum(w_den, axis=-1)
+        num = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            w_num, vs, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0] = num / jnp.maximum(den, 1e-30)[:, None]
+
+
+def paged_wave_attention_pallas(idx, rowb, live, q, sink_k, sink_v,
+                                local_k, local_v, local_pos,
+                                k_store, v_store, pos_store,
+                                est_logit, cs, vs, *,
+                                sink_len: int, softcap=None,
+                                block_l: int = 512,
+                                interpret: bool = False):
+    """Gather-free fused decode attention over the raw wave-index zones.
+
+    idx/live: (BH, r) int32 retrieved cluster ids + validity (scalar
+    prefetch); rowb: (BH, 2) int32 [window_lo (exclusive), q_pos (inclusive)];
+    q: (BH, G, hd) f32; sink_k/v: (BH, Ss, hd) — slot t holds token t, slots
+    >= ``sink_len`` are alignment padding; local_k/v: (BH, Lp, hd) with
+    local_pos (BH, Lp) int32 (-1 = empty, Lp a multiple of block_l);
+    k/v/pos_store: (BH, M, cap, hd) / (BH, M, cap) — read IN PLACE, one
+    (cap, hd) block per retrieved cluster; est_logit/cs: (BH, G, E) f32 f32;
+    vs: (BH, E, hd) f32. Returns (BH, G, hd) f32.
+
+    Grid: (BH, 1 + Lp/block_l + r) — step 0 is the sink, then the local
+    blocks, then one step per retrieved cluster whose BlockSpec index map is
+    driven by the prefetched ``idx`` (paged-attention idiom; no gather temp).
+    """
+    BH, G, hd = q.shape
+    M, cap = k_store.shape[1], k_store.shape[2]
+    r = idx.shape[1]
+    Ss = sink_k.shape[1]
+    Lp = local_k.shape[1]
+    E = vs.shape[1]
+    assert r >= 1 and Lp % block_l == 0, (r, Lp, block_l)
+    nlb = Lp // block_l
+    nblocks = 1 + nlb + r
+    scale = 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_paged_kernel, softcap=softcap, scale=scale,
+                             sink=sink_len, n_local_blocks=nlb,
+                             nblocks=nblocks)
+    lmap = lambda b, j, *_: (b, jnp.clip(j - 1, 0, nlb - 1), 0)
+    lpmap = lambda b, j, *_: (b, jnp.clip(j - 1, 0, nlb - 1))
+    cmap = lambda b, j, idx_ref, *_: \
+        (b, idx_ref[b, jnp.clip(j - 1 - nlb, 0, r - 1)], 0, 0)
+    cpmap = lambda b, j, idx_ref, *_: \
+        (b, idx_ref[b, jnp.clip(j - 1 - nlb, 0, r - 1)], 0)
+    park = lambda b, j, *_: (b, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(BH, nblocks),
+        in_specs=[
+            pl.BlockSpec((1, G, hd), park),                     # q
+            pl.BlockSpec((1, Ss, hd), park),                    # sink_k
+            pl.BlockSpec((1, Ss, hd), park),                    # sink_v
+            pl.BlockSpec((1, block_l, hd), lmap),               # local_k
+            pl.BlockSpec((1, block_l, hd), lmap),               # local_v
+            pl.BlockSpec((1, block_l), lpmap),                  # local_pos
+            pl.BlockSpec((1, 1, cap, hd), cmap),                # k_store
+            pl.BlockSpec((1, 1, cap, hd), cmap),                # v_store
+            pl.BlockSpec((1, 1, cap), cpmap),                   # pos_store
+            pl.BlockSpec((1, G, E), park),                      # est_logit
+            pl.BlockSpec((1, G, E), park),                      # cs
+            pl.BlockSpec((1, E, hd), park),                     # vs
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), park),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, G, hd), jnp.float32),
+        interpret=interpret,
+    )(idx, rowb, live, q, sink_k, sink_v, local_k, local_v, local_pos,
+      k_store, v_store, pos_store, est_logit, cs, vs)

@@ -1,8 +1,13 @@
-"""Jit'd wrapper around the fused wave-attention Pallas kernel.
+"""Jit'd wrappers around the fused wave-attention Pallas kernels.
 
 Handles layout: flattens (B, Hkv) -> BH, pads T to the kernel's block size
 and E/hd to VPU-friendly multiples, then restores shapes. Padded exec-buffer
 slots are masked invalid; padded estimation slots carry NEG logits.
+
+``paged_wave_attention`` is the gather-free variant (see README.md): it takes
+the raw wave-index zones — sink, local buffer, cluster stores + retrieved
+ids — and never materializes a gather temp or execution-buffer concat; only
+the tiny steady zone and estimation tensors are padded/copied for alignment.
 """
 from __future__ import annotations
 
@@ -11,7 +16,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.wave_attention.kernel import NEG, wave_attention_pallas
+from repro.kernels.wave_attention.kernel import (NEG,
+                                                 paged_wave_attention_pallas,
+                                                 wave_attention_pallas)
+from repro.kernels.wave_attention.ref import paged_wave_attention_jnp
 
 
 def on_cpu() -> bool:
@@ -61,4 +69,79 @@ def wave_attention_merge(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
 
     out = wave_attention_pallas(q, k, v, ok, el, cs, vs, softcap=softcap,
                                 block_t=bt, interpret=interpret)
+    return out.reshape(B, H, G, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_l",
+                                             "interpret", "emulate"))
+def paged_wave_attention(qg, sink_k, sink_v, local_k, local_v, local_pos,
+                         k_store, v_store, pos_store, idx_r, live, rowb,
+                         est_logit, cs_e, vs_e, *, softcap=None,
+                         block_l: int = 512, interpret: bool = False,
+                         emulate: bool = None):
+    """Gather-free fused decode merge over the raw wave-index zones.
+
+    qg: (B, H, G, hd); sink_k/v: (B, H, S, hd); local_k/v: (B, H, Lb, hd)
+    with local_pos (B, H, Lb) int32 (-1 = empty slot); k/v_store:
+    (B, H, M, cap, hd) with pos_store (B, H, M, cap) — passed through in
+    their storage dtype and read in place by the kernel; idx_r/live:
+    (B, H, r) int32 retrieved ids + validity; rowb: (B, H, 2) int32
+    [window_lo (exclusive), q_pos (inclusive)]; est_logit/cs_e: (B, H, G, E)
+    f32; vs_e: (B, H, E, hd) f32. Returns (B, H, G, hd) f32 with semantics
+    identical to ``core.attention.tripartite_merge_jnp`` on the gathered
+    execution buffer.
+
+    ``emulate`` (default: follows ``interpret``) swaps the Pallas kernel for
+    ``ref.paged_wave_attention_jnp`` — the same zone-walk in plain jnp. The
+    jax 0.4.x Pallas *interpreter* carries all input refs as mutable loop
+    state (full-store copies every grid step), so the CPU serving path uses
+    the emulation; interpret=True + emulate=False runs the actual kernel
+    through the interpreter (parity tests).
+    """
+    B, H, G, hd = qg.shape
+    sink = sink_k.shape[2]
+    Lb = local_k.shape[2]
+    E = vs_e.shape[2]
+    f32 = jnp.float32
+    if emulate is None:
+        emulate = interpret
+
+    def flat(a):
+        return a.reshape((B * H,) + a.shape[2:])
+
+    if emulate:
+        out = paged_wave_attention_jnp(
+            flat(idx_r).astype(jnp.int32), flat(rowb).astype(jnp.int32),
+            flat(live).astype(jnp.int32), flat(qg).astype(f32),
+            flat(sink_k), flat(sink_v), flat(local_k), flat(local_v),
+            flat(local_pos).astype(jnp.int32), flat(k_store), flat(v_store),
+            flat(pos_store).astype(jnp.int32), flat(est_logit).astype(f32),
+            flat(cs_e).astype(f32), flat(vs_e).astype(f32), sink_len=sink,
+            softcap=softcap)
+        return out.reshape(B, H, G, hd)
+
+    # Alignment pads touch only the O(steady)-sized zones and the meta-index
+    # estimation tensors — never the cluster stores, which flow through
+    # unconverted (an outside astype would copy the ENTIRE store; the kernel
+    # casts per block in VMEM).
+    sk, _ = _pad_to(flat(sink_k), 1, 16)
+    sv, _ = _pad_to(flat(sink_v), 1, 16)
+    bl = min(block_l, max(128, Lb))
+    lk, _ = _pad_to(flat(local_k), 1, bl)
+    lv, _ = _pad_to(flat(local_v), 1, bl)
+    lp = flat(local_pos).astype(jnp.int32)
+    lp = jnp.pad(lp, ((0, 0), (0, lk.shape[1] - Lb)), constant_values=-1)
+    el = flat(est_logit).astype(f32)
+    cs = flat(cs_e).astype(f32)
+    vs = flat(vs_e).astype(f32)
+    el = jnp.pad(el, ((0, 0), (0, 0), (0, (-E) % 128)), constant_values=NEG)
+    cs = jnp.pad(cs, ((0, 0), (0, 0), (0, (-E) % 128)), constant_values=NEG)
+    vs, _ = _pad_to(vs, 1, 128)
+
+    out = paged_wave_attention_pallas(
+        flat(idx_r).astype(jnp.int32), flat(rowb).astype(jnp.int32),
+        flat(live).astype(jnp.int32), flat(qg).astype(f32), sk, sv, lk, lv,
+        lp, flat(k_store), flat(v_store), flat(pos_store).astype(jnp.int32),
+        el, cs, vs, sink_len=sink, softcap=softcap, block_l=bl,
+        interpret=interpret)
     return out.reshape(B, H, G, hd)

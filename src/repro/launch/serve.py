@@ -37,6 +37,13 @@ def main():
                     help="request i generates new-tokens + i*stagger tokens")
     ap.add_argument("--admission", default="chunked",
                     choices=["chunked", "blocking"])
+    ap.add_argument("--attn-impl", default=None, choices=["jnp", "fused"],
+                    help="retro decode-attention implementation: 'jnp' "
+                         "(reference execution-buffer path) or 'fused' "
+                         "(gather-free paged Pallas wave-attention kernel — "
+                         "retrieved clusters read from the stores in place, "
+                         "no gather temp; interpret-mode on CPU). Default: "
+                         "the config's retro.attn_impl")
     ap.add_argument("--prefill-chunk", type=int, default=256,
                     help="chunked-admission tokens per scheduler iteration")
     ap.add_argument("--prefill-bucket", type=int, default=1,
@@ -50,7 +57,8 @@ def main():
     engine = ServeEngine(cfg, params, runtime=args.runtime, gen_headroom=512,
                          admission=args.admission,
                          prefill_chunk=args.prefill_chunk,
-                         prefill_bucket=args.prefill_bucket)
+                         prefill_bucket=args.prefill_bucket,
+                         attn_impl=args.attn_impl)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, lens[i % len(lens)])
                     .astype(np.int32),
@@ -58,7 +66,8 @@ def main():
             for i in range(args.requests)]
     m = engine.serve(reqs, batch_size=args.batch)
     print(f"served {len(reqs)} requests on {args.batch} slots "
-          f"({args.runtime}, {args.admission} admission): "
+          f"({args.runtime}, {args.admission} admission, "
+          f"{engine.attn_impl} attention): "
           f"prefill {m.prefill_s:.2f}s, "
           f"decode {m.tokens_out} tokens @ {m.decode_tps:.1f} tok/s, "
           f"slot occupancy {m.slot_occupancy:.2f}, "

@@ -178,8 +178,9 @@ def prefill(params, cfg: ModelConfig, tokens, frames, *, runtime="retro",
 
 def decode_step(params, cfg: ModelConfig, state: EncDecServeState, token, *,
                 runtime="retro", plan: ZonePlan, inline_flush: bool = False,
-                active=None):
+                active=None, attn_impl=None):
     a, retro = cfg.attn, cfg.retro
+    impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
     x = params["embed"][token] * math.sqrt(cfg.d_model)
     B = x.shape[0]
 
@@ -193,7 +194,8 @@ def decode_step(params, cfg: ModelConfig, state: EncDecServeState, token, *,
         q, k, v = q[:, 0], k[:, 0], v[:, 0]
         if runtime == "retro":
             lstate = append_token(lstate, k, v, active=active)
-            o = wa.wave_attention_decode(q, lstate, retro, plan).out
+            o = wa.wave_attention_decode(q, lstate, retro, plan,
+                                         impl=impl).out
             if inline_flush:
                 lstate = maybe_flush(lstate, retro)
         else:

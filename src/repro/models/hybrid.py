@@ -165,8 +165,9 @@ def prefill(params, cfg: ModelConfig, tokens, *, runtime: str = "retro",
 
 def decode_step(params, cfg: ModelConfig, state: HybridServeState, token, *,
                 runtime: str = "retro", plan: ZonePlan,
-                inline_flush: bool = False, active=None):
+                inline_flush: bool = False, active=None, attn_impl=None):
     a, retro = cfg.attn, cfg.retro
+    impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
     x = params["embed"][token] * math.sqrt(cfg.d_model)
     B = x.shape[0]
     sites = attn_sites(cfg)
@@ -189,7 +190,8 @@ def decode_step(params, cfg: ModelConfig, state: HybridServeState, token, *,
             if runtime == "retro":
                 kst = append_token(kst, k, v, active=active)
                 o = wa.wave_attention_decode(q, kst, retro, plan,
-                                             softcap=a.softcap).out
+                                             softcap=a.softcap,
+                                             impl=impl).out
                 if inline_flush:
                     kst = maybe_flush(kst, retro)
             else:

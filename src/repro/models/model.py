@@ -163,9 +163,14 @@ def finalize_prefill_chunk(cfg: ModelConfig, state, *, runtime: str = "retro",
 def apply_decode(params, cfg: ModelConfig, state, token, *,
                  runtime: str = "retro", plan: Optional[ZonePlan] = None,
                  seq_len: Optional[int] = None, gen_headroom: int = 4096,
-                 inline_flush: bool = False, active=None):
+                 inline_flush: bool = False, active=None,
+                 attn_impl: Optional[str] = None):
     """``active``: optional (B,) bool slot mask — inactive (free) rows of a
-    continuous batch skip their KV-state append so counters never drift."""
+    continuous batch skip their KV-state append so counters never drift.
+
+    ``attn_impl``: wave-attention implementation for the retro runtime —
+    "jnp" (reference) or "fused" (gather-free paged Pallas kernel,
+    interpret-mode on CPU); None defers to ``cfg.retro.attn_impl``."""
     if plan is None and cfg.family != "ssm":
         assert seq_len is not None, "need plan or seq_len"
         plan = plan_zones(seq_len, cfg.retro, gen_headroom)
@@ -173,17 +178,17 @@ def apply_decode(params, cfg: ModelConfig, state, token, *,
         return transformer.decode_step(params, cfg, state, token,
                                        runtime=runtime, plan=plan,
                                        inline_flush=inline_flush,
-                                       active=active)
+                                       active=active, attn_impl=attn_impl)
     if cfg.family == "ssm":
         return rwkv6.decode_step(params, cfg, state, token)
     if cfg.family == "hybrid":
         return hybrid.decode_step(params, cfg, state, token, runtime=runtime,
                                   plan=plan, inline_flush=inline_flush,
-                                  active=active)
+                                  active=active, attn_impl=attn_impl)
     if cfg.family == "audio":
         return encdec.decode_step(params, cfg, state, token, runtime=runtime,
                                   plan=plan, inline_flush=inline_flush,
-                                  active=active)
+                                  active=active, attn_impl=attn_impl)
     raise ValueError(cfg.family)
 
 

@@ -365,8 +365,13 @@ def finalize_prefill_chunk(cfg: ModelConfig, state: PrefillChunkState, *,
 def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
                 runtime: str = "retro", plan: ZonePlan,
                 inline_flush: bool = False,
-                active: Optional[jax.Array] = None) -> Tuple[jax.Array, ServeState]:
+                active: Optional[jax.Array] = None,
+                attn_impl: Optional[str] = None) -> Tuple[jax.Array, ServeState]:
     """One generation step. token: (B,) int32 -> logits (B, V).
+
+    ``attn_impl``: wave-attention implementation — "jnp" (reference) or
+    "fused" (gather-free paged Pallas kernel); None defers to
+    ``cfg.retro.attn_impl``.
 
     ``inline_flush=False`` keeps the segmented-clustering index update OFF the
     hot path (the paper amortizes it to ~0.2% of decode latency by running it
@@ -380,6 +385,7 @@ def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
     positions: RoPE uses each row's length."""
     a = cfg.attn
     retro = cfg.retro
+    impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
     x = params["embed"][token] * math.sqrt(cfg.d_model)     # (B, D)
     B = x.shape[0]
 
@@ -394,7 +400,8 @@ def decode_step(params, cfg: ModelConfig, state: ServeState, token, *,
         if runtime == "retro":
             lstate = append_token(lstate, k, v, active=active)
             out = wa.wave_attention_decode(q, lstate, retro, plan,
-                                           window=window, softcap=a.softcap)
+                                           window=window, softcap=a.softcap,
+                                           impl=impl)
             if inline_flush:
                 lstate = maybe_flush(lstate, retro)
             o = out.out
@@ -441,7 +448,8 @@ def join_state(cold, hot) -> WaveState:
 
 
 def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
-                      plan: ZonePlan, unroll: bool = False, mesh=None):
+                      plan: ZonePlan, unroll: bool = False, mesh=None,
+                      attn_impl: Optional[str] = None):
     """Retro decode with the hot/cold split: returns (logits, new_hot).
 
     ``cold``/``hot`` are dicts of stacked (L, ...) leaves as produced by
@@ -450,8 +458,12 @@ def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
     ``unroll=True`` replaces the layer scan with an unrolled loop (§Perf
     iteration): lax.scan bundles its xs — including the read-only cluster
     stores — into the while-loop tuple, which buffer assignment materializes
-    as a full-store temp copy; unrolling reads the stores in place."""
+    as a full-store temp copy; unrolling reads the stores in place.
+
+    ``attn_impl``: as in ``decode_step`` ("fused" composes with the split:
+    the paged kernel reads the cold stores in place)."""
     a, retro = cfg.attn, cfg.retro
+    impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
     x = params["embed"][token] * math.sqrt(cfg.d_model)
     B = x.shape[0]
 
@@ -471,8 +483,8 @@ def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
                                            window=window, softcap=a.softcap)
         else:
             o = wa.wave_attention_decode(q, lstate, retro, plan,
-                                         window=window,
-                                         softcap=a.softcap).out
+                                         window=window, softcap=a.softcap,
+                                         impl=impl).out
         x = x + o.reshape(B, -1) @ lp["attn"]["wo"]
         h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
         y, _ = _ffn(lp, h, cfg)

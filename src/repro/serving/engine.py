@@ -128,14 +128,19 @@ class ServeEngine:
     batch_size=1 reproduces them token-for-token, under either admission
     mode). ``prefill_chunk`` sets the chunked-admission chunk size;
     ``prefill_bucket`` > 1 right-pads blocking-mode prompts up to a multiple,
-    trading a masked prefill for fewer compiled shapes."""
+    trading a masked prefill for fewer compiled shapes. ``attn_impl`` selects
+    the retro decode-attention implementation ("jnp" reference or "fused"
+    gather-free paged kernel); None defers to ``cfg.retro.attn_impl``."""
 
     def __init__(self, cfg: ModelConfig, params, *, runtime: str = "retro",
                  gen_headroom: int = 1024, temperature: float = 0.0,
                  max_context: Optional[int] = None, prefill_bucket: int = 1,
-                 admission: str = "chunked", prefill_chunk: int = 256):
+                 admission: str = "chunked", prefill_chunk: int = 256,
+                 attn_impl: Optional[str] = None):
         if admission not in ("chunked", "blocking"):
             raise ValueError(f"unknown admission mode {admission!r}")
+        from repro.core.attention import resolve_attn_impl
+        self.attn_impl = resolve_attn_impl(attn_impl or cfg.retro.attn_impl)
         self.cfg = cfg
         self.params = params
         self.runtime = runtime
@@ -240,6 +245,7 @@ class ServeEngine:
         key = (batch_size, max_ctx)
         if key not in self._decode_jit:
             cfg, rt, gh = self.cfg, self.runtime, self.gen_headroom
+            impl = self.attn_impl
             plan = plan_zones(max_ctx, cfg.retro, gh) \
                 if cfg.family != "ssm" else None
 
@@ -247,7 +253,8 @@ class ServeEngine:
             def decode(params, state, token, active):
                 return M.apply_decode(params, cfg, state, token, runtime=rt,
                                       plan=plan, seq_len=max_ctx,
-                                      gen_headroom=gh, active=active)
+                                      gen_headroom=gh, active=active,
+                                      attn_impl=impl)
 
             @partial(jax.jit, donate_argnums=(0,))
             def flush(state):

@@ -11,3 +11,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (deselect with -m 'not slow')")
+
+
+def cost_bytes(compiled) -> float:
+    """XLA 'bytes accessed' of a ``jit(...).lower(...).compile()`` result
+    (jax returns a dict, or a list of per-device dicts on some versions)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("bytes accessed", 0.0))

@@ -104,6 +104,144 @@ def test_gather_repeated_indices():
                                   np.asarray(kst[0, 0, 0]))
 
 
+# ---------------------------------------------------------------------------
+# Gather-free paged kernel: parity vs the reference execution-buffer path.
+# Both flavors are exercised: the actual Pallas kernel through the
+# interpreter (emulate=False) and the jnp zone-walk emulation the CPU
+# serving path resolves to (emulate=True).
+# ---------------------------------------------------------------------------
+
+
+def _paged_state(G=4, n=640, B=2, H=2, hd=32, seed=0, lengths=None,
+                 retro_kw=None, n_append=0):
+    from repro.configs.base import RetroConfig
+    from repro.core.wave_index import append_token, prefill_build
+    from repro.core.zones import plan_zones
+
+    kw = dict(avg_cluster=8, cluster_cap=16, prefill_segment=256,
+              update_segment=128, sink=4, local=32, kmeans_iters=3)
+    kw.update(retro_kw or {})
+    retro = RetroConfig(**kw)
+    rng = np.random.default_rng(seed)
+    k = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, n, H, hd)), jnp.float32)
+    plan = plan_zones(n, retro, 128)
+    state = prefill_build(k, v, retro, plan.m_max, dtype=jnp.float32,
+                          lengths=lengths)
+    for i in range(n_append):
+        kn = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        state = append_token(state, kn, kn)
+    q = jnp.asarray(rng.standard_normal((B, G * H, hd)), jnp.float32)
+    return q, state, retro, plan
+
+
+def _paged_parity(q, state, retro, plan, emulate, **kw):
+    from unittest import mock
+
+    from repro.core.attention import wave_attention_decode
+    from repro.kernels.wave_attention import ops as wa_ops
+
+    o_ref = wave_attention_decode(q, state, retro, plan, impl="jnp", **kw).out
+    orig = wa_ops.paged_wave_attention
+
+    def forced(*a, **k):
+        k["emulate"] = emulate
+        return orig(*a, **k)
+
+    with mock.patch.object(wa_ops, "paged_wave_attention", forced):
+        o_fused = wave_attention_decode(q, state, retro, plan, impl="fused",
+                                        **kw).out
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_fused),
+                               atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+@pytest.mark.parametrize("G", [1, 4, 8])
+def test_paged_kernel_parity_gqa(G, emulate):
+    q, state, retro, plan = _paged_state(G=G)
+    _paged_parity(q, state, retro, plan, emulate)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+@pytest.mark.parametrize("softcap,window", [(30.0, None), (None, 200.0),
+                                            (50.0, 128.0)])
+def test_paged_kernel_parity_softcap_window(softcap, window, emulate):
+    q, state, retro, plan = _paged_state(seed=3)
+    w = None if window is None else jnp.float32(window)
+    _paged_parity(q, state, retro, plan, emulate, softcap=softcap, window=w)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+@pytest.mark.parametrize("use_est,overflow", [(True, True), (True, False),
+                                              (False, False)])
+def test_paged_kernel_parity_estimation_toggles(use_est, overflow, emulate):
+    q, state, retro, plan = _paged_state(seed=5)
+    _paged_parity(q, state, retro, plan, emulate, use_estimation=use_est,
+                  overflow_correction=overflow)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+def test_paged_kernel_parity_plan_e_zero(emulate):
+    """Full retrieval coverage => plan.e == 0 (no estimation zone)."""
+    q, state, retro, plan = _paged_state(
+        seed=7, retro_kw=dict(cluster_cap=64, prefill_segment=64,
+                              update_segment=32, retrieval_frac=1.0,
+                              estimation_frac=0.0))
+    assert plan.e == 0
+    _paged_parity(q, state, retro, plan, emulate)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+def test_paged_kernel_parity_ragged_rows(emulate):
+    """Per-row lengths + appended decode tokens: rows sit at different
+    positions with partially filled local buffers."""
+    q, state, retro, plan = _paged_state(
+        seed=9, n=512, lengths=jnp.asarray([512, 300], jnp.int32), n_append=5)
+    _paged_parity(q, state, retro, plan, emulate)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+def test_paged_kernel_parity_steady_only(emulate):
+    """Prompt shorter than sink + local => r = e = 0; the fused path pads a
+    dead retrieval slot that the live mask must kill."""
+    q, state, retro, plan = _paged_state(
+        seed=11, n=24, retro_kw=dict(local=64))
+    assert plan.r == 0 and plan.e == 0
+    _paged_parity(q, state, retro, plan, emulate)
+
+
+def test_paged_decode_no_gather_temp():
+    """Acceptance: the jitted fused decode emits no (B*H, r, cap, hd) gather
+    temp, and its cost_analysis bytes-accessed drops vs the jnp path."""
+    import re
+
+    from repro.core.attention import wave_attention_decode
+
+    q, state, retro, plan = _paged_state(G=2, n=2048, retro_kw=dict(
+        avg_cluster=16, cluster_cap=32, retrieval_frac=0.35))
+    B, H = state.k_store.shape[:2]
+    gather_shapes = [f"{B},{H},{plan.r},{retro.cluster_cap}",
+                     f"{B * H},{plan.r},{retro.cluster_cap}"]
+
+    def compiled(impl):
+        fn = jax.jit(lambda q, st: wave_attention_decode(
+            q, st, retro, plan, impl=impl).out)
+        return fn.lower(q, state).compile()
+
+    from conftest import cost_bytes
+    c_jnp, c_fused = compiled("jnp"), compiled("fused")
+    hlo = c_fused.as_text()
+    for shape in gather_shapes:
+        assert not re.search(rf"\[{shape},\d+\]", hlo), shape
+    assert cost_bytes(c_fused) < cost_bytes(c_jnp)
+
+
 def test_wave_attention_kernel_matches_core_merge():
     """The kernel path (impl='pallas') plugged into the full tripartite
     attention equals the jnp path on identical state."""

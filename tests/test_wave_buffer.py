@@ -130,6 +130,28 @@ def test_admit_more_uniques_than_cache(policy):
     np.testing.assert_array_equal(out, host[ids])
 
 
+def test_admit_clip_preserves_request_order():
+    """Regression: np.unique re-sorts ids before the capacity clip, so
+    overflow admission used to keep the LOWEST cluster ids instead of the
+    first-requested ones. The clip must be first-requested-first-admitted."""
+    buf, host = _mk(n_clusters=64, cache=2)
+    ids = np.array([50, 9, 30, 3, 40])     # 5 uniques > 2 slots, descending-ish
+    out = buf.assemble(ids)
+    np.testing.assert_array_equal(out, host[ids])
+    buf.apply_updates()
+    owners = set(buf.cache_owner[buf.cache_owner >= 0])
+    assert owners == {50, 9}, owners       # NOT {3, 9} (id-sorted clip)
+    for cid in (50, 9):
+        slot = buf.table.cache_slot[cid]
+        assert slot >= 0
+        np.testing.assert_array_equal(buf.cache[slot], host[cid])
+    # duplicates still dedupe to the FIRST occurrence's position
+    buf2, host2 = _mk(n_clusters=64, cache=2)
+    buf2.assemble(np.array([7, 5, 7, 1]))  # uniques in request order: 7, 5, 1
+    buf2.apply_updates()
+    assert set(buf2.cache_owner[buf2.cache_owner >= 0]) == {7, 5}
+
+
 def test_transfer_accounting():
     buf, host = _mk(n_clusters=16, cache=4, payload=32)
     per = host[0].nbytes
