@@ -27,6 +27,13 @@ def make_trace(n_clusters=4096, steps=300, working=64, req=32, drift=4,
     return out
 
 
+def cache_size(frac: float, n: int) -> int:
+    """Cache slots for a fractional sizing — clamped to >= 1 so tiny
+    ``int(frac * n)`` configs degrade to a one-slot cache instead of the
+    zero-slot pass-through."""
+    return max(1, int(frac * n))
+
+
 def run():
     n, payload = 4096, 2048                       # 2KB blocks (paper default)
     host = np.zeros((n, payload // 4), np.float32)
@@ -41,7 +48,7 @@ def run():
          f"hit=0.000;link_bytes={base_link}")
 
     # + block cache, update performed synchronously on the critical path
-    buf = WaveBuffer(host, cache_clusters=int(0.05 * n), policy="lru")
+    buf = WaveBuffer(host, cache_clusters=cache_size(0.05, n), policy="lru")
     t0 = time.perf_counter()
     for ids in trace:
         buf.assemble(ids)
@@ -52,7 +59,7 @@ def run():
          f"{buf.stats.bytes_over_link};base_link_bytes={base_link}")
 
     # + asynchronous update: only the access is on the critical path
-    buf = WaveBuffer(host, cache_clusters=int(0.05 * n), policy="lru")
+    buf = WaveBuffer(host, cache_clusters=cache_size(0.05, n), policy="lru")
     t_access = 0.0
     for ids in trace:
         t0 = time.perf_counter()
@@ -66,7 +73,7 @@ def run():
     # replacement-policy ablation (paper: "explored several cache policies,
     # selected LRU as default due to its best performance")
     for policy in ("lru", "clock", "fifo"):
-        buf = WaveBuffer(host, cache_clusters=int(0.05 * n), policy=policy)
+        buf = WaveBuffer(host, cache_clusters=cache_size(0.05, n), policy=policy)
         for ids in trace:
             buf.assemble(ids)
             buf.apply_updates()

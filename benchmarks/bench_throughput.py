@@ -33,16 +33,19 @@ def bytes_touched_retro(plan, retro, H, hd, m, itemsize=4):
     return (2 * exact * H * hd + meta + est) * itemsize
 
 
-def _ragged_setup(quick: bool = False):
+def _ragged_setup(quick: bool = False, retrieval_frac: float = 0.018):
     """Tiny ragged-arrival serving scenario shared by both admission modes:
     a queue longer than the slot count, so admissions keep happening while
-    other requests decode (the interference the chunked scheduler targets)."""
+    other requests decode (the interference the chunked scheduler targets).
+    ``retrieval_frac`` is raised by the offload scenario so the per-step
+    working set actually exceeds the small cache fractions."""
     import jax as _jax
     from repro.configs.base import AttnConfig, ModelConfig, RetroConfig
     from repro.models import model as M
 
     retro = RetroConfig(avg_cluster=8, cluster_cap=64, prefill_segment=64,
-                        update_segment=32, sink=4, local=32, kmeans_iters=3)
+                        update_segment=32, sink=4, local=32, kmeans_iters=3,
+                        retrieval_frac=retrieval_frac)
     cfg = ModelConfig(
         arch_id="ragged-bench", family="dense", n_layers=2, d_model=64,
         d_ff=128, vocab=512,
@@ -109,6 +112,64 @@ def compare_admission(quick: bool = False) -> dict:
     result["itl_p99_blocking_over_chunked"] = \
         round(b99 / c99, 2) if c99 > 0 else None
     return result
+
+
+def compare_offload(quick: bool = False) -> dict:
+    """Host-offload serving (wave buffer in the decode loop) vs the
+    direct-store path, at >= 2 device-cache fractions: token-for-token equal
+    outputs plus the serve-level Fig. 16 trajectory (hit ratio, bytes over
+    the link, pending hits). ``benchmarks/run.py --quick`` merges the result
+    into BENCH_throughput.json."""
+    # retrieval-heavy plan (r ~ 30 clusters/step at 768 ctx): the small cache
+    # fractions then sit well under the per-step working set, so the
+    # trajectory actually spans eviction pressure -> high reuse
+    cfg, params, prompts, news = _ragged_setup(quick, retrieval_frac=0.3)
+    if quick:       # offload decode syncs per layer: trim the quick queue
+        prompts, news = prompts[:3], news[:3]
+
+    def serve(offload, frac):
+        from repro.serving.engine import Request, ServeEngine
+        eng = ServeEngine(cfg, params, runtime="retro", gen_headroom=256,
+                          max_context=768, admission="chunked",
+                          prefill_chunk=64, offload=offload, cache_frac=frac)
+        reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+                for p, n in zip(prompts, news)]
+        m = eng.serve(reqs, batch_size=2)
+        return m, [r.out_tokens for r in reqs]
+
+    m0, ref = serve(False, 0.2)
+    result = {"scenario": "ragged_continuous_offload", "slots": 2,
+              "requests": len(prompts),
+              "direct": {"decode_tps": round(m0.decode_tps, 1),
+                         "tokens_out": m0.tokens_out},
+              "cache_fracs": {}}
+    equal = True
+    for frac in (0.05, 0.2, 0.5):
+        m, outs = serve(True, frac)
+        equal = equal and outs == ref
+        result["cache_fracs"][str(frac)] = {
+            "hit_ratio": round(m.cache_hit_ratio, 4),
+            "effective_hit_ratio": round(m.effective_cache_hit_ratio, 4),
+            "pending_hits": m.cache_pending_hits,
+            "bytes_over_link": m.bytes_over_link,
+            "bytes_from_cache": m.bytes_from_cache,
+            "bytes_from_pending": m.bytes_from_pending,
+            "decode_tps": round(m.decode_tps, 1),
+            "tokens_out": m.tokens_out,
+        }
+        emit(f"offload_cache_frac_{frac}",
+             m.decode_s / max(m.tokens_out, 1) * 1e6,
+             f"hit={m.cache_hit_ratio:.3f};"
+             f"eff_hit={m.effective_cache_hit_ratio:.3f};"
+             f"link_bytes={m.bytes_over_link};"
+             f"pending_hits={m.cache_pending_hits}")
+    result["outputs_equal"] = equal
+    return result
+
+
+def run_offload():
+    """Host-offload serving trajectory (CSV flavor)."""
+    compare_offload(quick=False)
 
 
 def compare_attn_impl(quick: bool = False) -> dict:

@@ -1,9 +1,11 @@
 # One benchmark per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 #
 # ``--quick`` runs the continuous-serving smoke comparison (chunked vs
-# blocking admission on the same ragged queue) plus the jnp-vs-fused decode
-# attention comparison (per-step latency p50/p99 + cost_analysis bytes) and
-# writes both to a ``BENCH_throughput.json`` artifact so the perf trajectory
+# blocking admission on the same ragged queue), the jnp-vs-fused decode
+# attention comparison (per-step latency p50/p99 + cost_analysis bytes), and
+# the host-offload serving comparison (serve-level wave-buffer hit ratio /
+# link traffic at several cache fractions, outputs vs the direct store) and
+# writes them to a ``BENCH_throughput.json`` artifact so the perf trajectory
 # is recorded per PR.
 from __future__ import annotations
 
@@ -21,6 +23,7 @@ def main() -> None:
         t0 = time.time()
         res = bench_throughput.compare_admission(quick=True)
         res["attn_impl"] = bench_throughput.compare_attn_impl(quick=True)
+        res["offload"] = bench_throughput.compare_offload(quick=True)
         with open("BENCH_throughput.json", "w") as f:
             json.dump(res, f, indent=2)
             f.write("\n")
@@ -33,6 +36,11 @@ def main() -> None:
             "fused attention changed outputs vs jnp"
         assert res["attn_impl"]["bytes_drop_frac"] > 0, \
             "fused decode step did not reduce bytes accessed"
+        assert res["offload"]["outputs_equal"], \
+            "host-offload serving changed outputs vs the direct store"
+        fr = res["offload"]["cache_fracs"]
+        assert all(v["bytes_over_link"] > 0 for v in fr.values()), \
+            "offload serving recorded no link traffic"
         return
 
     from benchmarks import (bench_accuracy_budget, bench_cache,
@@ -46,6 +54,7 @@ def main() -> None:
         ("fig13_decode_throughput", bench_throughput.run),
         ("attn_impl_jnp_vs_fused", bench_throughput.run_attn_impl),
         ("fig16_wave_buffer", bench_cache.run),
+        ("fig16_serve_offload", bench_throughput.run_offload),
         ("fig15_prefill_overhead", bench_prefill.run),
         ("fig17b_long_generation", bench_longgen.run),
         ("fig10_niah_trained_model", bench_niah.run),

@@ -28,22 +28,30 @@ def main():
     params = M.init_params(CFG, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    for runtime in ("retro", "full"):
-        engine = ServeEngine(CFG, params, runtime=runtime, gen_headroom=512)
+    for runtime, offload in (("retro", False), ("retro", True),
+                             ("full", False)):
+        engine = ServeEngine(CFG, params, runtime=runtime, gen_headroom=512,
+                             offload=offload, cache_frac=0.2)
         reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
                         max_new_tokens=new_tokens) for _ in range(2 * B)]
         t0 = time.perf_counter()
         m = engine.serve(reqs, batch_size=B)
         dt = time.perf_counter() - t0
-        print(f"[{runtime:5s}] {len(reqs)} reqs x {S} ctx -> "
+        tag = "retro+off" if offload else runtime
+        print(f"[{tag:9s}] {len(reqs)} reqs x {S} ctx -> "
               f"{new_tokens} new tokens each: {dt:.1f}s total, "
               f"decode {m.decode_tps:.1f} tok/s, "
-              f"slot occupancy {m.slot_occupancy:.2f}")
+              f"slot occupancy {m.slot_occupancy:.2f}"
+              + (f", cache hit {m.cache_hit_ratio:.3f}, "
+                 f"link {m.bytes_over_link / 2**20:.1f} MiB" if offload
+                 else ""))
 
     # --- host-offload configuration: device block cache over host KV blocks
+    # (clamped >= 1: a tiny fractional sizing must degrade to a one-slot
+    # cache, not a zero-slot pass-through)
     n_clusters, payload = 2048, 2 * 32 * 32  # K+V block of one cluster
     host_kv = rng.standard_normal((n_clusters, payload)).astype(np.float32)
-    buf = WaveBuffer(host_kv, cache_clusters=int(0.05 * n_clusters))
+    buf = WaveBuffer(host_kv, cache_clusters=max(1, int(0.05 * n_clusters)))
     working = rng.choice(n_clusters, 48, replace=False)
     for step in range(256):
         if step % 16 == 0:

@@ -62,6 +62,16 @@ class RetroConfig:
     # "fused" (gather-free paged Pallas kernel, Sec. 4.6; interpret-mode on
     # CPU). Engines/launchers may override per run.
     attn_impl: str = "jnp"
+    # host-offload wave buffer (paper Sec. 4.3): decode-time cluster retrieval
+    # goes through a device block cache backed by host-resident KV stores;
+    # cache placement is accuracy-agnostic (token-for-token identical to the
+    # direct-store path). Engines/launchers may override per run.
+    offload: bool = False
+    # device block-cache size: ``cache_clusters`` absolute slots, or (when 0)
+    # ``cache_frac`` of the static cluster-store size — always clamped >= 1.
+    cache_clusters: int = 0
+    cache_frac: float = 0.2
+    cache_policy: str = "lru"
 
     def n_clusters(self, seq_len: int) -> int:
         return max(1, seq_len // self.avg_cluster)

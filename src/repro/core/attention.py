@@ -137,15 +137,24 @@ def _local_positions(state: WaveState):
 
 
 def _fused_wave_attention(qg, state: WaveState, idx_r, est_logit, cs_e, vs_e,
-                          *, window, softcap):
+                          *, window, softcap, kv_src=None):
     """Gather-free decode merge: hand the raw zones to the paged Pallas
     kernel (``kernels.wave_attention``), which walks sink -> local buffer ->
     the r retrieved clusters IN PLACE via scalar-prefetched ids and folds the
     estimation zone into the same online softmax. No (B, H, r, cap, hd)
-    gather temp, no execution-buffer concat."""
+    gather temp, no execution-buffer concat.
+
+    ``kv_src``: optional ``(k_blocks, v_blocks, pos_blocks)`` replacing the
+    state's monolithic cluster stores as the block source — the cache-slot
+    indirection hook of the host-offload serve path, where ``idx_r`` holds
+    device-cache slots (hits + per-step miss staging slots) instead of
+    cluster ids. Block payloads are bit-identical either way, so placement
+    never changes the result."""
     from repro.kernels.wave_attention import ops as wa_ops
     B, Hkv, G, hd = qg.shape
     r = idx_r.shape[2]
+    k_blk, v_blk, p_blk = kv_src if kv_src is not None else (
+        state.k_store, state.v_store, state.pos_store)
     q_pos = state.length - 1                                   # (B,)
 
     # per-row validity bounds: pos <= hi (= q_pos) and pos > lo. ``lo`` folds
@@ -172,7 +181,7 @@ def _fused_wave_attention(qg, state: WaveState, idx_r, est_logit, cs_e, vs_e,
 
     return wa_ops.paged_wave_attention(
         qg, state.sink_k, state.sink_v, state.local_k, state.local_v,
-        local_pos, state.k_store, state.v_store, state.pos_store, idx_k,
+        local_pos, k_blk, v_blk, p_blk, idx_k,
         live, rowb, est_logit, cs_e, vs_e, softcap=softcap,
         interpret=wa_ops.on_cpu())
 
@@ -202,35 +211,89 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     cross-shard LSE merge.
     """
     B, Hq, hd = q.shape
-    Hkv = state.k_store.shape[1]
+    Hkv = state.centroid.shape[1]
     G = Hq // Hkv
-    cap = retro.cluster_cap
-    scale = 1.0 / math.sqrt(hd)
-    q_pos = state.length - 1                               # (B,) per-row
     qg = q.reshape(B, Hkv, G, hd)
     impl = resolve_attn_impl(impl)
 
+    idx_r, est_logit, cs_e, vs_e = wave_decode_rank(
+        qg, state, retro, plan, window=window, softcap=softcap,
+        use_estimation=use_estimation,
+        overflow_correction=overflow_correction,
+        cluster_offset=cluster_offset)
+    return wave_attention_attend(
+        q, state, retro, plan, idx_r, est_logit, cs_e, vs_e, window=window,
+        softcap=softcap, impl=impl, include_steady=include_steady,
+        return_parts=return_parts)
+
+
+def wave_decode_rank(qg, state: WaveState, retro: RetroConfig, plan: ZonePlan,
+                     *, window: Optional[jax.Array] = None,
+                     softcap: Optional[float] = None,
+                     use_estimation: bool = True,
+                     overflow_correction: bool = True, cluster_offset=0):
+    """Control-plane half of the decode step: rank clusters and build the
+    estimation-zone inputs. Touches only the META index (centroids, value
+    sums, sizes) and per-row counters — never the cluster payload stores —
+    so the host-offload serve path can run it with the payload stores absent,
+    translate ``idx_r`` through its ``ClusterMappingTable``, and hand cache
+    slots to :func:`wave_attention_attend`.
+
+    qg: (B, Hkv, G, hd). Returns (idx_r, est_logit, cs_e, vs_e)."""
     cs, idx_re = rank_clusters(qg, state, plan, window, softcap,
                                cluster_offset)
     idx_r, idx_e = idx_re[:, :, :plan.r], idx_re[:, :, plan.r:]
-
     est_logit, cs_e, vs_e = _estimation_zone(
         state, cs, idx_r, idx_e, use_estimation=use_estimation,
         overflow_correction=overflow_correction)
+    return idx_r, est_logit, cs_e, vs_e
+
+
+def wave_attention_attend(q, state: WaveState, retro: RetroConfig,
+                          plan: ZonePlan, idx, est_logit, cs_e, vs_e, *,
+                          kv_src=None, window: Optional[jax.Array] = None,
+                          softcap: Optional[float] = None, impl: str = "jnp",
+                          include_steady=True, return_parts: bool = False):
+    """Data-plane half of the decode step: exact attention over the steady
+    zone plus the ``idx``-addressed blocks of ``kv_src``, merged with the
+    estimation zone.
+
+    ``kv_src``: optional ``(k_blocks, v_blocks, pos_blocks)`` with leading
+    dims (B, Hkv, N_slots, ...) replacing the state's monolithic cluster
+    stores as the block source. This is the cache-slot indirection of the
+    host-offload configuration: ``idx`` then holds device-cache slots
+    (cache hits + per-step miss staging slots) translated on the control
+    plane, not cluster ids. Block payloads are identical bits either way, so
+    cache placement is accuracy-agnostic."""
+    B, Hq, hd = q.shape
+    Hkv = state.centroid.shape[1]
+    G = Hq // Hkv
+    r = idx.shape[2]
+    q_pos = state.length - 1                               # (B,) per-row
+    qg = q.reshape(B, Hkv, G, hd)
+    impl = resolve_attn_impl(impl)
 
     # ---- gather-free paged kernel: zones handed over unconcatenated --------
     # (the sharded return_parts merge keeps the reference path: partial
     # (num, den, m) are what shards LSE-combine, see core.distributed)
     if impl == "fused" and not return_parts and include_steady is True:
-        out = _fused_wave_attention(qg, state, idx_r, est_logit, cs_e, vs_e,
-                                    window=window, softcap=softcap)
-        return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx_r)
+        out = _fused_wave_attention(qg, state, idx, est_logit, cs_e, vs_e,
+                                    window=window, softcap=softcap,
+                                    kv_src=kv_src)
+        return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx)
 
     # ---- execution buffer: steady zone + retrieved blocks ------------------
-    kb, vb, pb = _gather_clusters(state, idx_r)            # (B,H,r,cap,hd)
-    k_ret = kb.reshape(B, Hkv, plan.r * cap, hd)
-    v_ret = vb.reshape(B, Hkv, plan.r * cap, hd)
-    p_ret = pb.reshape(B, Hkv, plan.r * cap)
+    if kv_src is None:
+        kb, vb, pb = _gather_clusters(state, idx)          # (B,H,r,cap,hd)
+    else:
+        k_blk, v_blk, p_blk = kv_src
+        take = lambda a: jnp.take_along_axis(
+            a, idx.reshape(idx.shape + (1,) * (a.ndim - 3)), axis=2)
+        kb, vb, pb = take(k_blk), take(v_blk), take(p_blk)
+    cap = kb.shape[3]
+    k_ret = kb.reshape(B, Hkv, r * cap, hd)
+    v_ret = vb.reshape(B, Hkv, r * cap, hd)
+    p_ret = pb.reshape(B, Hkv, r * cap)
 
     sink_pos = jnp.broadcast_to(jnp.arange(retro.sink, dtype=jnp.int32),
                                 (B, Hkv, retro.sink))
@@ -255,10 +318,10 @@ def wave_attention_decode(q: jax.Array, state: WaveState, retro: RetroConfig,
     if return_parts:
         num, den, m = tripartite_merge_parts_jnp(
             qg, k_exec, v_exec, ok, est_logit, cs_e, vs_e, softcap=softcap)
-        return num, den, m, idx_r
+        return num, den, m, idx
     out = tripartite_merge(qg, k_exec, v_exec, ok, est_logit, cs_e, vs_e,
                            softcap=softcap, impl=impl)
-    return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx_r)
+    return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx)
 
 
 def tripartite_merge_parts_jnp(qg, k_exec, v_exec, valid, est_logit, cs_e,

@@ -30,6 +30,7 @@ class BufferStats:
     misses: int = 0
     bytes_from_cache: int = 0
     bytes_over_link: int = 0        # host->device traffic (the "PCIe" analogue)
+    bytes_from_pending: int = 0     # repeat-miss bytes served from the pending set
     bytes_steady: int = 0
     updates_deferred: int = 0
     pending_hits: int = 0           # repeat misses served from the pending set
@@ -37,6 +38,21 @@ class BufferStats:
     @property
     def hit_ratio(self) -> float:
         return self.hits / max(1, self.lookups)
+
+    @property
+    def effective_hit_ratio(self) -> float:
+        """Fig. 16-style effective hit rate: a pending hit never crosses the
+        link again, so for traffic purposes it IS a hit — counting it as a
+        plain miss (as ``hit_ratio`` alone would) understates the cache under
+        repeat misses within one update window."""
+        return (self.hits + self.pending_hits) / max(1, self.lookups)
+
+    def merge(self, other: "BufferStats") -> None:
+        """Accumulate another buffer's counters (engine-level aggregation)."""
+        for f in ("lookups", "hits", "misses", "bytes_from_cache",
+                  "bytes_over_link", "bytes_from_pending", "bytes_steady",
+                  "updates_deferred", "pending_hits"):
+            setattr(self, f, getattr(self, f) + getattr(other, f))
 
 
 class ClusterMappingTable:
@@ -68,6 +84,13 @@ class WaveBuffer:
     def __init__(self, kv_host: np.ndarray, cache_clusters: int,
                  blocks_per_cluster: int = 1, policy: str = "lru"):
         assert policy in ("lru", "fifo", "clock")
+        if cache_clusters < 0:
+            raise ValueError(f"cache_clusters must be >= 0, got {cache_clusters}")
+        # cache_clusters == 0 (tiny int(frac * n) configs round to zero) is an
+        # explicit PASS-THROUGH: every lookup is a miss served over the link
+        # (with pending-set dedup within an update window) and nothing is ever
+        # admitted — not an accident of the _admit early-return path.
+        self.passthrough = cache_clusters == 0
         self.kv_host = kv_host
         n = kv_host.shape[0]
         self.table = ClusterMappingTable(n, blocks_per_cluster)
@@ -85,12 +108,15 @@ class WaveBuffer:
         self.bytes_per_cluster = int(kv_host[0].nbytes) if n else 0
 
     # ------------------------------------------------------------------ access
-    def assemble(self, cluster_ids: np.ndarray,
-                 steady_payload: Optional[np.ndarray] = None) -> np.ndarray:
-        """Assemble the execution buffer for one decode step (synchronous).
+    def translate(self, cluster_ids: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Control-plane access for one decode step (synchronous).
 
-        Returns the concatenated payloads [steady | retrieved clusters] and
-        records hit/miss traffic. Cache *insertion* is deferred (async update).
+        Returns ``(slot, hit, miss_payload)``: per-id device-cache slot
+        (>= 0 for hits, -1 for misses), the hit mask, and the host payload of
+        every MISS row (hit rows are zero — the serve engine reads hits from
+        the device cache store and only ships misses over the link). Records
+        hit/miss/pending traffic; cache *insertion* stays deferred.
         """
         cluster_ids = np.asarray(cluster_ids, dtype=np.int64)
         slot, _ = self.table.lookup(cluster_ids)
@@ -100,14 +126,12 @@ class WaveBuffer:
         self.stats.hits += int(hit.sum())
         self.stats.misses += int((~hit).sum())
         self.stats.bytes_from_cache += int(hit.sum()) * self.bytes_per_cluster
-
-        payload = np.empty((len(cluster_ids),) + self.kv_host.shape[1:],
-                           dtype=self.kv_host.dtype)
         if hit.any():
-            payload[hit] = self.cache[slot[hit]]
             self.stamp[slot[hit]] = self.tick            # touch (cheap, vector)
             self.ref_bit[slot[hit]] = True
 
+        miss_payload = np.zeros((len(cluster_ids),) + self.kv_host.shape[1:],
+                                dtype=self.kv_host.dtype)
         # A cluster missed again before the deferred update lands is served
         # from the pending set: one link transfer per cluster per update
         # window, not one per lookup (previously double-fetched AND
@@ -124,26 +148,47 @@ class WaveBuffer:
                     self.stats.bytes_over_link += self.bytes_per_cluster
                 else:
                     self.stats.pending_hits += 1
-                payload[pos] = block
+                    self.stats.bytes_from_pending += self.bytes_per_cluster
+                miss_payload[pos] = block
             # defer admission of fresh misses (paper: async update by CPU pool)
-            if fresh_ids:
+            if fresh_ids and not self.passthrough:
                 self._pending.append((
                     np.asarray(fresh_ids, dtype=np.int64),
                     np.stack([self._pending_map[c] for c in fresh_ids])))
                 self.stats.updates_deferred += 1
+        return slot, hit, miss_payload
 
+    def assemble(self, cluster_ids: np.ndarray,
+                 steady_payload: Optional[np.ndarray] = None) -> np.ndarray:
+        """Assemble the execution buffer for one decode step (synchronous).
+
+        Returns the concatenated payloads [steady | retrieved clusters] and
+        records hit/miss traffic. Cache *insertion* is deferred (async update).
+        """
+        slot, hit, payload = self.translate(cluster_ids)
+        if hit.any():
+            payload[hit] = self.cache[slot[hit]]
         if steady_payload is not None:
             self.stats.bytes_steady += int(steady_payload.nbytes)
             return np.concatenate([steady_payload, payload], axis=0)
         return payload
 
     # ------------------------------------------------------------------ update
-    def apply_updates(self):
-        """Apply deferred admissions (runs off the critical path)."""
+    def apply_updates(self) -> List[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        """Apply deferred admissions (runs off the critical path).
+
+        Returns the applied admissions as ``(slots, cluster_ids, payload)``
+        triples so a caller that mirrors this cache in device memory (the
+        serve engine's block-cache store) can replay the same scatter.
+        """
+        admissions: List[Tuple[np.ndarray, np.ndarray, np.ndarray]] = []
         for ids, payload in self._pending:
-            self._admit(ids, payload)
+            adm = self._admit(ids, payload)
+            if adm is not None:
+                admissions.append(adm)
         self._pending.clear()
         self._pending_map.clear()
+        return admissions
 
     def _victims(self, n: int) -> np.ndarray:
         if self.policy == "lru":
@@ -176,7 +221,10 @@ class WaveBuffer:
                 chosen.add(h)
         return np.asarray(victims, dtype=np.int64)
 
-    def _admit(self, cluster_ids: np.ndarray, payload: np.ndarray):
+    def _admit(self, cluster_ids: np.ndarray, payload: np.ndarray
+               ) -> Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]]:
+        if self.passthrough:
+            return None
         # dedupe (a cluster may be requested twice before updates apply) in
         # FIRST-REQUESTED order: np.unique re-sorts by cluster id, so a
         # capacity clip below would drop by id rather than request order —
@@ -187,7 +235,7 @@ class WaveBuffer:
         fresh = self.table.cache_slot[cluster_ids] < 0
         cluster_ids, payload = cluster_ids[fresh], payload[fresh]
         if len(cluster_ids) == 0:
-            return
+            return None
         # one assemble may request more unique clusters than the cache holds
         # (tiny caches / huge retrieval zones): admit only what fits — the
         # overflow stays host-resident and will miss again, which is correct.
@@ -203,3 +251,4 @@ class WaveBuffer:
         self.table.cache_slot[cluster_ids] = victims
         self.stamp[victims] = self.tick
         self.ref_bit[victims] = True
+        return victims, cluster_ids, payload

@@ -101,11 +101,16 @@ def _write_clusters(state: WaveState, res: ClusterResult, offset) -> WaveState:
     res leaves have leading (B, H, k_new, ...); offset is per-row (B,) (a
     scalar broadcasts) and may be traced — rows at different fill levels
     receive their new clusters at different slots.
+
+    ``None`` payload stores (the host-offload live view — k/v/pos live
+    host-side) pass through untouched: only the meta index is written.
     """
     B = state.size.shape[0]
     off = jnp.broadcast_to(jnp.asarray(offset, jnp.int32), (B,))
 
     def upd(store, new):
+        if store is None:
+            return None
         def row(sb, nb, ob):
             start = (0, ob) + (0,) * (nb.ndim - 2)
             return jax.lax.dynamic_update_slice(sb, nb.astype(sb.dtype), start)
@@ -446,7 +451,8 @@ def append_token(state: WaveState, k_new: jax.Array, v_new: jax.Array,
 
 
 def flush_segment(state: WaveState, retro: RetroConfig,
-                  rows: Optional[jax.Array] = None) -> WaveState:
+                  rows: Optional[jax.Array] = None,
+                  return_clusters: bool = False):
     """Cluster the oldest ``update_segment`` tokens of each FULL local buffer
     into new clusters (paper: decode-time index update, every 1K tokens) and
     slide the remaining ``local`` tokens to the front.
@@ -454,6 +460,11 @@ def flush_segment(state: WaveState, retro: RetroConfig,
     Per-row masked: under continuous batching rows fill their staging buffers
     at different steps, so only rows selected by ``rows`` (default: buffer
     full) are flushed; the rest pass through bit-unchanged.
+
+    ``return_clusters=True`` additionally returns the freshly clustered
+    ``ClusterResult`` (all rows — callers apply their own ``rows`` mask);
+    with ``None`` payload stores (host-offload live view) only the meta index
+    is written on device and the returned blocks are the host store's append.
     """
     useg = retro.update_segment
     lbuf = local_buffer_size(retro)
@@ -478,9 +489,11 @@ def flush_segment(state: WaveState, retro: RetroConfig,
     rolled_v = jnp.roll(state.local_v, -useg, axis=2)
 
     def sel(new, old):
+        if new is None:                    # host-resident payload store
+            return None
         return jnp.where(rows.reshape((B,) + (1,) * (new.ndim - 1)), new, old)
 
-    return state._replace(
+    out = state._replace(
         k_store=sel(flushed.k_store, state.k_store),
         v_store=sel(flushed.v_store, state.v_store),
         pos_store=sel(flushed.pos_store, state.pos_store),
@@ -494,6 +507,18 @@ def flush_segment(state: WaveState, retro: RetroConfig,
         local_v=sel(rolled_v, state.local_v),
         local_len=jnp.where(rows, state.local_len - useg, state.local_len),
     )
+    return (out, res) if return_clusters else out
+
+
+def flush_segment_offload(state: WaveState, retro: RetroConfig,
+                          rows: Optional[jax.Array] = None
+                          ) -> Tuple[WaveState, ClusterResult]:
+    """``flush_segment`` for the host-offload configuration: identical
+    clustering and meta-index update, with the PAYLOAD blocks returned for
+    the host control plane to append to its resident store (at each flushed
+    row's old ``n_clusters`` offset). ``state`` carries ``None`` payload
+    stores (the serve engine's live view); they pass through untouched."""
+    return flush_segment(state, retro, rows=rows, return_clusters=True)
 
 
 def maybe_flush(state: WaveState, retro: RetroConfig) -> WaveState:

@@ -73,12 +73,13 @@ def wave_attention_merge(qg, k_exec, v_exec, valid, est_logit, cs_e, vs_e, *,
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "block_l",
-                                             "interpret", "emulate"))
+                                             "interpret", "emulate",
+                                             "double_buffer"))
 def paged_wave_attention(qg, sink_k, sink_v, local_k, local_v, local_pos,
                          k_store, v_store, pos_store, idx_r, live, rowb,
                          est_logit, cs_e, vs_e, *, softcap=None,
                          block_l: int = 512, interpret: bool = False,
-                         emulate: bool = None):
+                         emulate: bool = None, double_buffer: bool = True):
     """Gather-free fused decode merge over the raw wave-index zones.
 
     qg: (B, H, G, hd); sink_k/v: (B, H, S, hd); local_k/v: (B, H, Lb, hd)
@@ -91,12 +92,20 @@ def paged_wave_attention(qg, sink_k, sink_v, local_k, local_v, local_pos,
     identical to ``core.attention.tripartite_merge_jnp`` on the gathered
     execution buffer.
 
+    The stores may be the monolithic cluster stores (``idx_r`` = cluster
+    ids) or the serve engine's device block cache + miss staging buffer
+    (``idx_r`` = cache slots, host-offload configuration) — the kernel only
+    sees an id-addressed block store.
+
     ``emulate`` (default: follows ``interpret``) swaps the Pallas kernel for
     ``ref.paged_wave_attention_jnp`` — the same zone-walk in plain jnp. The
     jax 0.4.x Pallas *interpreter* carries all input refs as mutable loop
     state (full-store copies every grid step), so the CPU serving path uses
     the emulation; interpret=True + emulate=False runs the actual kernel
-    through the interpreter (parity tests).
+    through the interpreter (parity tests). ``double_buffer`` selects the
+    kernel's cluster walk: explicit double-buffered DMA (default — cluster
+    j+1 streams while j folds) vs the one-grid-step-per-cluster BlockSpec
+    walk.
     """
     B, H, G, hd = qg.shape
     sink = sink_k.shape[2]
@@ -143,5 +152,5 @@ def paged_wave_attention(qg, sink_k, sink_v, local_k, local_v, local_pos,
         flat(live).astype(jnp.int32), flat(qg).astype(f32), sk, sv, lk, lv,
         lp, flat(k_store), flat(v_store), flat(pos_store).astype(jnp.int32),
         el, cs, vs, sink_len=sink, softcap=softcap, block_l=bl,
-        interpret=interpret)
+        double_buffer=double_buffer, interpret=interpret)
     return out.reshape(B, H, G, hd)

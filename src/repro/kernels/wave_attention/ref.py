@@ -34,6 +34,12 @@ def paged_wave_attention_jnp(idx, rowb, live, q, sink_k, sink_v,
     this path keeps the gather-free dataflow — the ``lax.scan`` body slices
     ONE (cap, hd) block per row per step, so no (BH, r, cap, hd) gather temp
     and no execution-buffer concat ever materializes.
+
+    Like the kernel, ``idx`` is just an address into the (BH, N, cap, ...)
+    block store handed in: cluster ids against the monolithic stores (direct
+    path) or translated cache slots against the serve engine's device block
+    cache + miss staging tail (host-offload path) — this function is the CPU
+    data plane of ``ServeEngine(offload=True)``.
     """
     BH, G, hd = q.shape
     scale = 1.0 / math.sqrt(hd)

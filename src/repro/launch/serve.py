@@ -48,6 +48,20 @@ def main():
                     help="chunked-admission tokens per scheduler iteration")
     ap.add_argument("--prefill-bucket", type=int, default=1,
                     help="blocking-mode prompt-length bucket")
+    ap.add_argument("--offload", action="store_true",
+                    help="host-offload wave buffer (paper Sec. 4.3): cluster "
+                         "payload stores live host-side; decode retrieval "
+                         "goes through a device block cache with cache-slot "
+                         "indirection into the paged kernel. Token-for-token "
+                         "identical to the direct-store path; requires the "
+                         "retro runtime on an attention family")
+    ap.add_argument("--cache-frac", type=float, default=None,
+                    help="device block-cache size as a fraction of the "
+                         "cluster store (offload mode; clamped >= 1 slot). "
+                         "Default: the config's retro.cache_frac")
+    ap.add_argument("--cache-policy", default=None,
+                    choices=["lru", "fifo", "clock"],
+                    help="block-cache replacement policy (offload mode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,7 +72,9 @@ def main():
                          admission=args.admission,
                          prefill_chunk=args.prefill_chunk,
                          prefill_bucket=args.prefill_bucket,
-                         attn_impl=args.attn_impl)
+                         attn_impl=args.attn_impl, offload=args.offload,
+                         cache_frac=args.cache_frac,
+                         cache_policy=args.cache_policy)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, lens[i % len(lens)])
                     .astype(np.int32),
@@ -66,12 +82,19 @@ def main():
             for i in range(args.requests)]
     m = engine.serve(reqs, batch_size=args.batch)
     print(f"served {len(reqs)} requests on {args.batch} slots "
-          f"({args.runtime}, {args.admission} admission, "
+          f"({args.runtime}{'+offload' if args.offload else ''}, "
+          f"{args.admission} admission, "
           f"{engine.attn_impl} attention): "
           f"prefill {m.prefill_s:.2f}s, "
           f"decode {m.tokens_out} tokens @ {m.decode_tps:.1f} tok/s, "
           f"slot occupancy {m.slot_occupancy:.2f}, "
           f"itl p50/p99 {m.itl_p50_s * 1e3:.1f}/{m.itl_p99_s * 1e3:.1f} ms")
+    if args.offload:
+        print(f"  wave buffer: hit {m.cache_hit_ratio:.3f} "
+              f"(effective {m.effective_cache_hit_ratio:.3f}, "
+              f"{m.cache_pending_hits} pending hits), "
+              f"link {m.bytes_over_link / 2**20:.1f} MiB, "
+              f"cache {m.bytes_from_cache / 2**20:.1f} MiB")
     for i, r in enumerate(reqs):
         print(f"  req {i}: prompt {len(r.prompt)}, out {len(r.out_tokens)}, "
               f"ttft {r.ttft_s:.2f}s, decode {r.decode_tps:.1f} tok/s")

@@ -192,6 +192,27 @@ def apply_decode(params, cfg: ModelConfig, state, token, *,
     raise ValueError(cfg.family)
 
 
+def supports_offload(cfg: ModelConfig, runtime: str = "retro") -> bool:
+    """The host-offload wave buffer (device block cache over host-resident
+    cluster stores) is implemented for the attention families under the retro
+    runtime; recurrent/enc-dec families and the dense-cache runtime have no
+    cluster stores to offload."""
+    return runtime == "retro" and cfg.family in ATTN_FAMILIES
+
+
+def offload_decode_fns(cfg: ModelConfig):
+    """Per-layer jit-able pieces of the offload decode step:
+    ``(embed, rank, attend, unembed, flush)`` — see
+    ``transformer.offload_decode_rank`` / ``offload_decode_attend``. The
+    engine owns the control plane between the two halves."""
+    if cfg.family not in ATTN_FAMILIES:
+        raise NotImplementedError(
+            f"host-offload decode unsupported for family {cfg.family}")
+    return (transformer.decode_embed, transformer.offload_decode_rank,
+            transformer.offload_decode_attend, transformer.decode_unembed,
+            transformer.offload_flush)
+
+
 def flush_state(cfg: ModelConfig, state, *, runtime: str = "retro"):
     """Run the decode-time segmented-clustering index update on every layer's
     wave state (the paper's asynchronous 1K-token update). No-op for dense

@@ -515,6 +515,106 @@ def decode_step_split(params, cfg: ModelConfig, cold, hot, token, *,
     return unembed(params, cfg, x), new_hot
 
 
+# ---------------------------------------------------------------------------
+# Host-offload decode (paper Sec. 4.3: wave buffer in the serve loop)
+#
+# The cluster PAYLOAD stores (k_store/v_store/pos_store) live host-side; the
+# device keeps the meta index + steady zones ("live" fields) plus a block
+# cache. One decode step is two jitted halves per layer with the control
+# plane (cluster-id -> cache-slot translation, miss fetch, deferred
+# admissions) in between:
+#
+#   rank:   qkv + local append + centroid ranking + estimation build
+#           -> retrieved cluster ids (the only per-layer host sync)
+#   attend: paged attention over [device block cache | miss staging buffer]
+#           via translated cache slots, then output proj + FFN
+#
+# Identical math to ``decode_step`` — cache placement is accuracy-agnostic.
+# ---------------------------------------------------------------------------
+
+PAYLOAD_FIELDS = ("k_store", "v_store", "pos_store")
+LIVE_FIELDS = tuple(f for f in WaveState._fields if f not in PAYLOAD_FIELDS)
+
+
+def live_wave_state(live: Dict[str, jax.Array]) -> WaveState:
+    """WaveState view over the device-resident fields of the host-offload
+    configuration — the payload stores are host-side, so they are ``None``
+    here; rank/estimation/steady-zone code never touches them."""
+    return WaveState(k_store=None, v_store=None, pos_store=None, **live)
+
+
+def decode_embed(params, cfg: ModelConfig, token):
+    """token: (B,) int32 -> (B, D) embedded decode input."""
+    return params["embed"][token] * math.sqrt(cfg.d_model)
+
+
+def decode_unembed(params, cfg: ModelConfig, x):
+    """(B, D) final hidden -> (B, V) logits (final norm + unembed)."""
+    return unembed(params, cfg, L.rms_norm(x, params["final_norm"],
+                                           cfg.norm_eps))
+
+
+def offload_decode_rank(lp, window, cfg: ModelConfig, live: Dict, x, *,
+                        plan: ZonePlan, active: Optional[jax.Array] = None):
+    """Control-plane half of one offload decode layer. Returns
+    ``(ctx, idx_r, new_live)`` — ``idx_r`` (B, Hkv, r) are the retrieved
+    cluster ids the engine translates into cache slots; ``ctx`` carries the
+    query + estimation tensors into :func:`offload_decode_attend`."""
+    a, retro = cfg.attn, cfg.retro
+    B = x.shape[0]
+    lstate = live_wave_state(live)
+    pos = lstate.length                                  # (B,) new token pos
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.attention_qkv(
+        lp["attn"], h[:, None, :], a.n_heads, a.n_kv_heads, a.head_dim,
+        pos[:, None], a.rope_theta)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                  # (B, H*, hd)
+    lstate = append_token(lstate, k, v, active=active)
+    G = a.n_heads // a.n_kv_heads
+    qg = q.reshape(B, a.n_kv_heads, G, a.head_dim)
+    idx_r, est_logit, cs_e, vs_e = wa.wave_decode_rank(
+        qg, lstate, retro, plan, window=window, softcap=a.softcap)
+    ctx = (q, est_logit, cs_e, vs_e)
+    return ctx, idx_r, {f: getattr(lstate, f) for f in LIVE_FIELDS}
+
+
+def offload_decode_attend(lp, window, cfg: ModelConfig, live: Dict, x, ctx,
+                          cache_k, cache_v, cache_pos, idx_slots, *,
+                          plan: ZonePlan, attn_impl: Optional[str] = None):
+    """Data-plane half: attention over the steady zone + the slot-addressed
+    blocks of the device cache (hits) / miss staging tail (misses), then
+    output projection + FFN. Returns the next hidden state."""
+    a, retro = cfg.attn, cfg.retro
+    impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
+    B = x.shape[0]
+    lstate = live_wave_state(live)
+    q, est_logit, cs_e, vs_e = ctx
+    out = wa.wave_attention_attend(
+        q, lstate, retro, plan, idx_slots, est_logit, cs_e, vs_e,
+        kv_src=(cache_k, cache_v, cache_pos), window=window,
+        softcap=a.softcap, impl=impl).out
+    x = x + out.reshape(B, -1) @ lp["attn"]["wo"]
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    y, _ = _ffn(lp, h, cfg)
+    return x + y
+
+
+def offload_flush(cfg: ModelConfig, live_stacked: Dict, rows):
+    """Index update for the offload serve path: per layer, cluster the oldest
+    update segment into META entries on device and return the payload blocks
+    (stacked (L, B, H, k_new, cap, ...)) for the host store. ``rows``: (B,)
+    bool — rows to flush (the engine's staging-full mirror); unflushed rows
+    pass through bit-unchanged and their returned blocks must be ignored."""
+    from repro.core.wave_index import flush_segment_offload
+
+    def one(lv):
+        st, res = flush_segment_offload(live_wave_state(lv), cfg.retro,
+                                        rows=rows)
+        return {f: getattr(st, f) for f in LIVE_FIELDS}, res
+
+    return jax.vmap(one)(live_stacked)
+
+
 def init_serve_state(cfg: ModelConfig, B: int, seq_len: int, *,
                      runtime: str = "retro", gen_headroom: int = 4096,
                      zero_fill: bool = False) -> ServeState:

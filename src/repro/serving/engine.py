@@ -27,12 +27,23 @@ slot's state is overwritten by the next admission graft. First tokens of all
 requests admitted in the same iteration are sampled with ONE coalesced
 device->host readback.
 
+Host-offload mode (``offload=True``, paper Sec. 4.3): the cluster payload
+stores live host-side behind per-(layer, slot, kv-head) ``WaveBuffer``s and
+decode attention reads a per-layer device block cache through cache-slot
+indirection — hits from the cache store, misses fetched over the link into a
+per-step staging tail — with cache admissions deferred off the hot path.
+Token-for-token identical to the direct-store path; the decode loop then
+syncs retrieved ids once per layer (the paper's CPU control plane), trading
+the sync-free loop for bounded device memory. See ``_OffloadPlane``.
+
 Metrics are per-request (TTFT, decode tok/s) plus engine-level slot occupancy,
 aggregate throughput, and inter-token latency (p50/p99 over gaps between
 consecutive token deliveries of continuing requests — the decode-interference
 signal chunked admission exists to shrink). Only real requests count: free
 slots produce logits that are never sampled, so padding can't inflate
-``tokens_out``.
+``tokens_out``. Offload serving adds the wave-buffer counters (hit ratio,
+bytes over the link / from cache / from pending, pending hits) aggregated
+over every per-row block cache.
 """
 from __future__ import annotations
 
@@ -47,10 +58,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.wave_buffer import BufferStats, WaveBuffer
 from repro.core.wave_index import local_buffer_size
 from repro.core.zones import plan_zones
 from repro.models import model as M
 from repro.models.model import ATTN_FAMILIES
+from repro.models.transformer import HOT_FIELDS, LIVE_FIELDS
 
 
 @dataclass
@@ -80,10 +93,49 @@ class ServeMetrics:
     # gaps between consecutive token deliveries of continuing requests —
     # includes any admission work scheduled in between (the interference term)
     step_s: List[float] = field(default_factory=list)
+    # host-offload wave-buffer counters (Fig. 16 at serve level; zero unless
+    # the engine runs with offload=True) — aggregated over every per-row
+    # block cache, including caches retired when their slot was re-admitted
+    cache: "BufferStats" = field(default_factory=BufferStats)
 
     @property
     def decode_tps(self) -> float:
         return self.tokens_out / max(self.decode_s, 1e-9)
+
+    # -- delegated wave-buffer counters (single source of truth: BufferStats)
+    @property
+    def cache_lookups(self) -> int:
+        return self.cache.lookups
+
+    @property
+    def cache_hits(self) -> int:
+        return self.cache.hits
+
+    @property
+    def cache_pending_hits(self) -> int:
+        return self.cache.pending_hits
+
+    @property
+    def bytes_over_link(self) -> int:
+        return self.cache.bytes_over_link
+
+    @property
+    def bytes_from_cache(self) -> int:
+        return self.cache.bytes_from_cache
+
+    @property
+    def bytes_from_pending(self) -> int:
+        return self.cache.bytes_from_pending
+
+    @property
+    def cache_hit_ratio(self) -> float:
+        return self.cache.hit_ratio
+
+    @property
+    def effective_cache_hit_ratio(self) -> float:
+        """Includes pending hits (repeat misses served without a second link
+        transfer) — the traffic-relevant hit rate."""
+        return self.cache.effective_hit_ratio
 
     @property
     def slot_occupancy(self) -> float:
@@ -120,6 +172,245 @@ class _Admission:
     logits: Any = None                  # device logits of the last chunk
 
 
+class _OffloadPlane:
+    """Host control plane of one offload serve() call (paper Sec. 4.3).
+
+    The cluster PAYLOAD stores live host-side, one ``WaveBuffer`` per
+    (layer, slot, kv-head) row over PACKED per-cluster payload rows
+    ``[K | V | positions]`` (f32 — exact for bf16/f32 stores and integer
+    positions, so cache placement is bit-transparent). The device keeps, per
+    layer, a block-cache store of ``C + r`` slots: slots [0, C) mirror each
+    row's ``WaveBuffer.cache`` and the tail r slots are the per-step miss
+    staging buffer. Each decode step runs per layer:
+
+      rank (jit) -> ids readback -> translate ids through the mapping tables
+      (hits -> cache slots, misses -> staging slots; misses fetched from the
+      host store) -> cache update (jit: previous step's deferred admissions +
+      this step's staged misses) -> attend (jit, slot-indirected paged
+      kernel) -> ``apply_updates`` (host, OFF the hot path; admissions mirror
+      into the device cache at the NEXT step's cache update).
+    """
+
+    def __init__(self, engine: "ServeEngine", B: int, max_ctx: int):
+        cfg = engine.cfg
+        self.cfg = cfg
+        self.params = engine.params
+        self.plan = plan_zones(max_ctx, cfg.retro, engine.gen_headroom)
+        self.L, self.B, self.H = cfg.n_layers, B, cfg.n_kv_heads
+        self.hd, self.cap, self.M = cfg.head_dim, cfg.retro.cluster_cap, \
+            self.plan.m_max
+        self.r = max(self.plan.r, 1)        # staging tail (dead slot if r=0)
+        self.C = engine._resolve_cache_clusters(self.M)
+        self.policy = engine.cache_policy
+        self.dtype = jnp.dtype(cfg.dtype)
+        C, r, cap, hd = self.C, self.r, self.cap, self.hd
+        self.cache_k = [jnp.zeros((B, self.H, C + r, cap, hd), self.dtype)
+                        for _ in range(self.L)]
+        self.cache_v = [jnp.zeros((B, self.H, C + r, cap, hd), self.dtype)
+                        for _ in range(self.L)]
+        self.cache_p = [jnp.full((B, self.H, C + r, cap), -1, jnp.int32)
+                        for _ in range(self.L)]
+        # per (layer, slot, head) host buffer; None until the slot is admitted
+        self.bufs: List[List[Optional[List[WaveBuffer]]]] = [
+            [None] * B for _ in range(self.L)]
+        # per-layer queued device-cache mirror of deferred admissions;
+        # None = nothing admitted (the mirror transfer + scatter is skipped)
+        self.pending_adm: List[Optional[Tuple[np.ndarray, ...]]] = \
+            [None] * self.L
+        self.ncl = np.zeros(B, np.int64)    # host mirror of n_clusters
+        self.retired = BufferStats()        # stats of replaced slot caches
+        (self._embed, self._rank, self._attend, self._unembed,
+         self._cache_upd, self._cache_stage, self._flush) = \
+            engine._offload_fns(B, max_ctx, self.C, self.r)
+        self._layers = [jax.tree.map(lambda a, i=i: a[i], engine.params["layers"])
+                        for i in range(self.L)]
+        self._windows = [engine.params["window"][i] for i in range(self.L)]
+
+    # ------------------------------------------------------------- packing
+    def _pack(self, k, v, p) -> np.ndarray:
+        """(M', cap, hd) x2 + (M', cap) -> (M', D) packed f32 payload rows."""
+        m = k.shape[0]
+        return np.concatenate([
+            np.asarray(k, np.float32).reshape(m, -1),
+            np.asarray(v, np.float32).reshape(m, -1),
+            np.asarray(p, np.float32)], axis=1)
+
+    def _unpack(self, rows: np.ndarray):
+        """(n, D) packed rows -> k/v (n, cap, hd) f32 + pos (n, cap) int32."""
+        n, cap, hd = rows.shape[0], self.cap, self.hd
+        k = rows[:, :cap * hd].reshape(n, cap, hd)
+        v = rows[:, cap * hd:2 * cap * hd].reshape(n, cap, hd)
+        p = rows[:, 2 * cap * hd:].astype(np.int32)
+        return k, v, p
+
+    # ----------------------------------------------------------- admission
+    def admit_slot(self, i: int, st1) -> None:
+        """Offload a freshly admitted request's cluster stores: device->host
+        transfer of slot ``i``'s payload blocks, fresh mapping tables (the
+        previous occupant's cache entries die with it; its stats are retired
+        into the engine aggregate)."""
+        k_all = np.asarray(st1.kv.k_store)[:, 0]        # (L, H, M, cap, hd)
+        v_all = np.asarray(st1.kv.v_store)[:, 0]
+        p_all = np.asarray(st1.kv.pos_store)[:, 0]
+        self.ncl[i] = int(np.asarray(st1.kv.n_clusters)[0, 0])
+        for l in range(self.L):
+            old = self.bufs[l][i]
+            if old is not None:
+                for buf in old:
+                    self.retired.merge(buf.stats)
+            self.bufs[l][i] = [
+                WaveBuffer(self._pack(k_all[l, h], v_all[l, h], p_all[l, h]),
+                           cache_clusters=self.C, policy=self.policy)
+                for h in range(self.H)]
+            # drop pending admissions aimed at the replaced slot's caches
+            if self.pending_adm[l] is not None:
+                slots, ak, av, ap = self.pending_adm[l]
+                slots = slots.copy()
+                slots[i] = self.C + self.r              # OOB => dropped write
+                self.pending_adm[l] = (slots, ak, av, ap)
+
+    # ------------------------------------------------------- control plane
+    def _translate(self, l: int, ids: np.ndarray, active: np.ndarray):
+        """Cluster ids -> combined cache-slot ids; fetch miss payloads.
+
+        Ids of not-yet-live clusters (>= the row's ``n_clusters`` mirror —
+        ``top_k`` tie-breaks the NEG-masked dead scores to exactly the ids
+        the next flush will allocate) NEVER touch the wave buffer: fetching
+        them would admit an all-masked payload that would later be served as
+        a STALE hit once the flush writes the real blocks at those ids. They
+        map to their staging slot instead, whose default ``pos = -1`` payload
+        reproduces the direct path's dead-block masking bit-for-bit.
+        """
+        B, H, r = ids.shape
+        cap, hd = self.cap, self.hd
+        idx_slots = np.zeros((B, H, r), np.int32)
+        miss_k = np.zeros((B, H, self.r, cap, hd), np.float32)
+        miss_v = np.zeros((B, H, self.r, cap, hd), np.float32)
+        miss_p = np.full((B, H, self.r, cap), -1, np.int32)
+        if r == 0:      # steady-zone-only plan: attend pads its own dead slot
+            return idx_slots, miss_k, miss_v, miss_p
+        stage = self.C + np.arange(r)
+        for b in range(B):
+            if not active[b] or self.bufs[l][b] is None:
+                continue
+            dead = ids[b] >= self.ncl[b]                    # (H, r)
+            for h in range(H):
+                buf = self.bufs[l][b][h]
+                live_j = np.where(~dead[h])[0]
+                idx_slots[b, h] = stage                     # default: staging
+                if len(live_j) == 0:
+                    continue
+                slot, hit, payload = buf.translate(ids[b, h, live_j])
+                idx_slots[b, h, live_j] = np.where(
+                    hit, slot, stage[live_j]).astype(np.int32)
+                miss_j = live_j[~hit]
+                if len(miss_j):
+                    mk, mv, mp = self._unpack(payload[~hit])
+                    miss_k[b, h, miss_j] = mk
+                    miss_v[b, h, miss_j] = mv
+                    miss_p[b, h, miss_j] = mp
+        return idx_slots, miss_k, miss_v, miss_p
+
+    def _drain_admissions(self, l: int, active: np.ndarray) -> None:
+        """Apply deferred WaveBuffer admissions (off the attend hot path) and
+        queue their device-cache mirror for the next step's cache update.
+        A warm-cache step with zero admissions queues None — the next cache
+        update then skips the mirror transfer + scatter entirely."""
+        B, H, r = self.B, self.H, self.r
+        queued = None
+        for b in range(B):
+            if not active[b] or self.bufs[l][b] is None:
+                continue
+            for h in range(H):
+                n = 0
+                for vict, _ids, payload in self.bufs[l][b][h].apply_updates():
+                    if queued is None:
+                        queued = (
+                            np.full((B, H, r), self.C + r, np.int32),  # OOB
+                            np.zeros((B, H, r, self.cap, self.hd),
+                                     np.float32),
+                            np.zeros((B, H, r, self.cap, self.hd),
+                                     np.float32),
+                            np.full((B, H, r, self.cap), -1, np.int32))
+                    slots, ak, av, ap = queued
+                    m = len(vict)
+                    pk, pv, pp = self._unpack(payload)
+                    slots[b, h, n:n + m] = vict
+                    ak[b, h, n:n + m] = pk
+                    av[b, h, n:n + m] = pv
+                    ap[b, h, n:n + m] = pp
+                    n += m
+        self.pending_adm[l] = queued
+
+    # ------------------------------------------------------------- decode
+    def decode_step(self, state, tokens_dev, active: np.ndarray):
+        """One decode step over the slot batch, layer by layer with the
+        control plane interleaved. Returns (device logits, new state)."""
+        x = self._embed(self.params, tokens_dev)
+        act_dev = jnp.asarray(active)
+        kv = state.kv
+        new_hot: List[Dict[str, jax.Array]] = []
+        for l in range(self.L):
+            live = {f: getattr(kv, f)[l] for f in LIVE_FIELDS}
+            ctx, idx_r, live = self._rank(self._layers[l], self._windows[l],
+                                          live, x, act_dev)
+            ids = np.asarray(idx_r)         # the per-layer control-plane sync
+            idx_slots, mk, mv, mp = self._translate(l, ids, active)
+            if self.pending_adm[l] is None:     # warm cache: staging only
+                self.cache_k[l], self.cache_v[l], self.cache_p[l] = \
+                    self._cache_stage(self.cache_k[l], self.cache_v[l],
+                                      self.cache_p[l], jnp.asarray(mk),
+                                      jnp.asarray(mv), jnp.asarray(mp))
+            else:
+                adm_slots, adm_k, adm_v, adm_p = self.pending_adm[l]
+                self.cache_k[l], self.cache_v[l], self.cache_p[l] = \
+                    self._cache_upd(self.cache_k[l], self.cache_v[l],
+                                    self.cache_p[l], jnp.asarray(adm_slots),
+                                    jnp.asarray(adm_k), jnp.asarray(adm_v),
+                                    jnp.asarray(adm_p), jnp.asarray(mk),
+                                    jnp.asarray(mv), jnp.asarray(mp))
+            x = self._attend(self._layers[l], self._windows[l], live, x, ctx,
+                             self.cache_k[l], self.cache_v[l],
+                             self.cache_p[l], jnp.asarray(idx_slots))
+            self._drain_admissions(l, active)   # deferred, off the hot path
+            new_hot.append(live)
+        logits = self._unembed(self.params, x)
+        kv = kv._replace(**{f: jnp.stack([h[f] for h in new_hot])
+                            for f in HOT_FIELDS})
+        return logits, state._replace(kv=kv)
+
+    # -------------------------------------------------------------- flush
+    def flush(self, state, rows: np.ndarray):
+        """Decode-time index update: meta entries on device, payload blocks
+        appended to the host stores at each flushed row's cluster offset."""
+        kv = state.kv
+        live = {f: getattr(kv, f) for f in LIVE_FIELDS}
+        new_live, res = self._flush(live, jnp.asarray(rows))
+        rk = np.asarray(res.k_store)        # (L, B, H, k_new, cap, hd)
+        rv = np.asarray(res.v_store)
+        rp = np.asarray(res.pos_store)
+        k_new = rk.shape[3]
+        for b in np.where(rows)[0]:
+            off = int(self.ncl[b])
+            for l in range(self.L):
+                if self.bufs[l][b] is None:
+                    continue
+                for h in range(self.H):
+                    self.bufs[l][b][h].kv_host[off:off + k_new] = \
+                        self._pack(rk[l, b, h], rv[l, b, h], rp[l, b, h])
+            self.ncl[b] += k_new
+        return state._replace(kv=kv._replace(**new_live))
+
+    # ------------------------------------------------------------- stats
+    def export_stats(self, metrics: "ServeMetrics") -> None:
+        metrics.cache.merge(self.retired)
+        for per_layer in self.bufs:
+            for row in per_layer:
+                if row is not None:
+                    for buf in row:
+                        metrics.cache.merge(buf.stats)
+
+
 class ServeEngine:
     """``serve(requests, batch_size)`` — continuous scheduler over a slot
     batch. ``max_context`` pins the decode geometry (zone plan / cluster-store
@@ -136,7 +427,11 @@ class ServeEngine:
                  gen_headroom: int = 1024, temperature: float = 0.0,
                  max_context: Optional[int] = None, prefill_bucket: int = 1,
                  admission: str = "chunked", prefill_chunk: int = 256,
-                 attn_impl: Optional[str] = None):
+                 attn_impl: Optional[str] = None,
+                 offload: Optional[bool] = None,
+                 cache_clusters: Optional[int] = None,
+                 cache_frac: Optional[float] = None,
+                 cache_policy: Optional[str] = None):
         if admission not in ("chunked", "blocking"):
             raise ValueError(f"unknown admission mode {admission!r}")
         from repro.core.attention import resolve_attn_impl
@@ -150,10 +445,23 @@ class ServeEngine:
         self.prefill_bucket = max(1, prefill_bucket)
         self.admission = admission
         self.prefill_chunk = max(1, prefill_chunk)
+        retro = cfg.retro
+        self.offload = retro.offload if offload is None else offload
+        if self.offload and not M.supports_offload(cfg, runtime):
+            raise ValueError(
+                "host-offload serving requires the retro runtime on an "
+                f"attention family, got runtime={runtime!r} "
+                f"family={cfg.family!r}")
+        self.cache_clusters = retro.cache_clusters if cache_clusters is None \
+            else cache_clusters
+        self.cache_frac = retro.cache_frac if cache_frac is None \
+            else cache_frac
+        self.cache_policy = cache_policy or retro.cache_policy
         self._prefill_jit: Dict[Any, Any] = {}
         self._decode_jit: Dict[Any, Any] = {}
         self._chunk_jit: Dict[Any, Any] = {}
         self._finalize_jit: Dict[Any, Any] = {}
+        self._offload_jit: Dict[Any, Any] = {}
         self._graft = jax.jit(
             lambda big, small, slot: jax.tree.map(
                 lambda b, s: jax.lax.dynamic_update_slice_in_dim(
@@ -225,21 +533,89 @@ class ServeEngine:
     def _finalize_fn(self, total_len: int, max_ctx: int):
         """Finalize + graft one admitted slot. Per-prompt-length entries are
         cheap (tail clustering + scatter) — the expensive compiled shape, the
-        chunk forward, is shared."""
-        key = (total_len, max_ctx)
+        chunk forward, is shared. In offload mode the finalized single-slot
+        state is ALSO returned: it is the source of the slot's device->host
+        store transfer (``_OffloadPlane.admit_slot``)."""
+        key = (total_len, max_ctx, self.offload)
         if key not in self._finalize_jit:
             cfg, rt = self.cfg, self.runtime
+            with_st1 = self.offload
 
             @partial(jax.jit, donate_argnums=(0,))
             def fin(big, cstate, slot):
                 st1 = M.finalize_prefill_chunk(cfg, cstate, runtime=rt,
                                                total_len=total_len)
-                return jax.tree.map(
+                big = jax.tree.map(
                     lambda b, s: jax.lax.dynamic_update_slice_in_dim(
                         b, s.astype(b.dtype), slot, axis=1), big, st1)
+                return (big, st1) if with_st1 else big
 
             self._finalize_jit[key] = fin
         return self._finalize_jit[key]
+
+    def _resolve_cache_clusters(self, m_max: int) -> int:
+        """Device block-cache slots: absolute override or a fraction of the
+        cluster-store size — clamped to [1, m_max] (tiny ``int(frac * n)``
+        configs must round up to a one-slot cache, never zero)."""
+        c = self.cache_clusters if self.cache_clusters > 0 \
+            else int(self.cache_frac * m_max)
+        return max(1, min(c, m_max))
+
+    def _offload_fns(self, B: int, max_ctx: int, C: int, r: int):
+        """Compiled pieces of the offload decode step, cached per engine
+        geometry: (embed, rank, attend, unembed, cache_update, flush)."""
+        key = (B, max_ctx, C, r)
+        if key not in self._offload_jit:
+            cfg = self.cfg
+            plan = plan_zones(max_ctx, cfg.retro, self.gen_headroom)
+            impl = self.attn_impl
+            (embed, rank, attend, unembed, flush) = M.offload_decode_fns(cfg)
+
+            embed_fn = jax.jit(lambda p, t: embed(p, cfg, t))
+
+            @jax.jit
+            def rank_fn(lp, window, live, x, active):
+                return rank(lp, window, cfg, live, x, plan=plan,
+                            active=active)
+
+            @jax.jit
+            def attend_fn(lp, window, live, x, ctx, ck, cv, cp, idx):
+                return attend(lp, window, cfg, live, x, ctx, ck, cv, cp, idx,
+                              plan=plan, attn_impl=impl)
+
+            unembed_fn = jax.jit(lambda p, x: unembed(p, cfg, x))
+
+            def _stage3(ck, cv, cp, miss_k, miss_v, miss_p):
+                # this step's misses stage into the tail [C, C + r)
+                def stage(c, m):
+                    return jax.lax.dynamic_update_slice(
+                        c, m.astype(c.dtype), (C,) + (0,) * (m.ndim - 1))
+                ss = jax.vmap(jax.vmap(stage))
+                return ss(ck, miss_k), ss(cv, miss_v), ss(cp, miss_p)
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def cache_upd(ck, cv, cp, adm_slots, adm_k, adm_v, adm_p,
+                          miss_k, miss_v, miss_p):
+                # previous step's deferred admissions mirror into [0, C)
+                # (OOB-padded slot ids are dropped writes)
+                def row(c, s, pay):
+                    return c.at[s].set(pay.astype(c.dtype), mode="drop")
+                rr = jax.vmap(jax.vmap(row))
+                ck, cv, cp = rr(ck, adm_slots, adm_k), \
+                    rr(cv, adm_slots, adm_v), rr(cp, adm_slots, adm_p)
+                return _stage3(ck, cv, cp, miss_k, miss_v, miss_p)
+
+            # warm-cache fast path: no admissions queued, staging only
+            cache_stage = partial(jax.jit, donate_argnums=(0, 1, 2))(_stage3)
+
+            @jax.jit
+            def flush_fn(live_stacked, rows):
+                return flush(cfg, live_stacked, rows)
+
+            self._offload_jit[key] = (embed_fn, rank_fn, attend_fn,
+                                      unembed_fn, cache_upd, cache_stage,
+                                      flush_fn)
+        return self._offload_jit[key]
 
     def _decode_fns(self, batch_size: int, max_ctx: int):
         key = (batch_size, max_ctx)
@@ -294,7 +670,9 @@ class ServeEngine:
         chunked = self.admission == "chunked" \
             and M.supports_chunked_prefill(cfg, rt) \
             and cfg.sparse_prefill_blocks == 0
-        decode, flush = self._decode_fns(B, max_ctx)
+        plane = _OffloadPlane(self, B, max_ctx) if self.offload else None
+        decode, flush = (None, None) if self.offload \
+            else self._decode_fns(B, max_ctx)
         state = M.make_serve_state(cfg, B, max_ctx, runtime=rt,
                                    gen_headroom=self.gen_headroom,
                                    zero_fill=True)
@@ -321,7 +699,12 @@ class ServeEngine:
             dt = time.perf_counter() - admit_t[i]
             n_decode = len(req.out_tokens) - 1   # first token is prefill's
             req.decode_tps = n_decode / dt if dt > 0 and n_decode > 0 else 0.0
-            metrics.request_tps.append(req.decode_tps)
+            # a max_new_tokens=1 request decodes ZERO tokens — recording its
+            # 0.0 tok/s would drag down mean/percentile request throughput,
+            # so the sample is skipped (the request still counts everywhere
+            # else: TTFT, tokens_out)
+            if n_decode > 0:
+                metrics.request_tps.append(req.decode_tps)
             slots[i] = None
             active[i] = False
 
@@ -347,6 +730,8 @@ class ServeEngine:
                     logits, st1 = prefill(self.params, batch,
                                           jnp.asarray([L], jnp.int32))
                     state = self._graft(state, st1, jnp.asarray(i, jnp.int32))
+                    if plane is not None:   # device->host store offload
+                        plane.admit_slot(i, st1)
                     completed.append((i, _Admission(req=req, logits=logits,
                                                     consumed=L)))
                     continue
@@ -385,7 +770,13 @@ class ServeEngine:
                 adm.consumed += n
                 if adm.consumed >= L:
                     fin = self._finalize_fn(L, max_ctx)
-                    state = fin(state, adm.cstate, jnp.asarray(i, jnp.int32))
+                    if plane is not None:
+                        state, st1 = fin(state, adm.cstate,
+                                         jnp.asarray(i, jnp.int32))
+                        plane.admit_slot(i, st1)    # device->host offload
+                    else:
+                        state = fin(state, adm.cstate,
+                                    jnp.asarray(i, jnp.int32))
                     adm.cstate = None
                     admitting[i] = None
                     completed.append((i, adm))
@@ -429,8 +820,12 @@ class ServeEngine:
             did_decode = False
             if active.any():
                 key, sub = jax.random.split(key)
-                logits, state = decode(self.params, state, tokens_dev,
-                                       jnp.asarray(active))
+                if plane is not None:
+                    logits, state = plane.decode_step(state, tokens_dev,
+                                                      active)
+                else:
+                    logits, state = decode(self.params, state, tokens_dev,
+                                           jnp.asarray(active))
                 new_sampled = self._sample_dev(logits, sub)  # device, no sync
                 snapshot = [slots[i] if active[i] else None for i in range(B)]
                 metrics.steps += 1
@@ -465,8 +860,15 @@ class ServeEngine:
 
             # ---- per-row masked index update (off the per-step hot path) ---
             if use_flush and (staged >= lbuf).any():
-                state = flush(state)
-                staged[staged >= lbuf] -= cfg.retro.update_segment
+                rows = staged >= lbuf
+                if plane is not None:
+                    state = plane.flush(state, rows)
+                else:
+                    state = flush(state)
+                staged[rows] -= cfg.retro.update_segment
+        if plane is not None:
+            plane.export_stats(metrics)
+            self._last_plane = plane        # inspection hook (tests)
         return metrics
 
     def run_wave(self, requests: List[Request],

@@ -135,7 +135,7 @@ def _paged_state(G=4, n=640, B=2, H=2, hd=32, seed=0, lengths=None,
     return q, state, retro, plan
 
 
-def _paged_parity(q, state, retro, plan, emulate, **kw):
+def _paged_parity(q, state, retro, plan, emulate, double_buffer=True, **kw):
     from unittest import mock
 
     from repro.core.attention import wave_attention_decode
@@ -146,6 +146,7 @@ def _paged_parity(q, state, retro, plan, emulate, **kw):
 
     def forced(*a, **k):
         k["emulate"] = emulate
+        k["double_buffer"] = double_buffer
         return orig(*a, **k)
 
     with mock.patch.object(wa_ops, "paged_wave_attention", forced):
@@ -161,6 +162,59 @@ def _paged_parity(q, state, retro, plan, emulate, **kw):
 def test_paged_kernel_parity_gqa(G, emulate):
     q, state, retro, plan = _paged_state(G=G)
     _paged_parity(q, state, retro, plan, emulate)
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec-walk", "double-buffered-dma"])
+def test_paged_kernel_cluster_walk_flavors(double_buffer):
+    """Both cluster-walk flavors of the paged kernel — the per-cluster
+    BlockSpec walk and the double-buffered manual-DMA walk (prefetch cluster
+    j+1 while folding j) — agree with the reference execution-buffer path
+    through the interpreter."""
+    q, state, retro, plan = _paged_state(G=4, seed=17)
+    _paged_parity(q, state, retro, plan, emulate=False,
+                  double_buffer=double_buffer)
+
+
+@pytest.mark.parametrize("double_buffer", [False, True],
+                         ids=["blockspec-walk", "double-buffered-dma"])
+def test_paged_kernel_walks_on_cache_slots(double_buffer):
+    """Cache-slot indirection: the kernel is agnostic to WHAT the id-addressed
+    block store is — permuting the blocks into a 'cache' store and passing
+    translated slots reproduces the direct-store result bit-for-bit."""
+    from repro.kernels.wave_attention import ops as wa_ops
+
+    q, state, retro, plan = _paged_state(G=2, seed=21)
+    from repro.core.attention import wave_decode_rank
+    B, H = state.k_store.shape[:2]
+    G = q.shape[1] // H
+    qg = q.reshape(B, H, G, q.shape[-1])
+    idx_r, el, cs, vs = wave_decode_rank(qg, state, retro, plan)
+    r = idx_r.shape[2]
+    assert r > 0
+
+    from repro.core.attention import wave_attention_attend
+
+    # build a slot store: slot s of row (b, h) holds cluster idx_r[b, h, s]
+    take = lambda a: jnp.take_along_axis(
+        a, idx_r.reshape(idx_r.shape + (1,) * (a.ndim - 3)), axis=2)
+    cache = (take(state.k_store), take(state.v_store), take(state.pos_store))
+    slots = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32), idx_r.shape)
+    import unittest.mock as mock
+    orig = wa_ops.paged_wave_attention
+
+    def forced(*a, **k):
+        k["double_buffer"] = double_buffer
+        k["emulate"] = False
+        return orig(*a, **k)
+
+    with mock.patch.object(wa_ops, "paged_wave_attention", forced):
+        direct = wave_attention_attend(q, state, retro, plan, idx_r, el, cs,
+                                       vs, impl="fused").out
+        via_cache = wave_attention_attend(q, state, retro, plan, slots, el,
+                                          cs, vs, kv_src=cache,
+                                          impl="fused").out
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(via_cache))
 
 
 @pytest.mark.parametrize("emulate", [False, True],

@@ -110,6 +110,7 @@ def test_engine_continuous_queue(setup):
     assert len(m.ttft_s) == 3 and len(m.request_tps) == 3
 
 
+@pytest.mark.slow
 def test_continuous_matches_solo_bitwise(setup):
     """Acceptance: a mixed queue of >= 3 distinct prompt lengths with
     staggered max_new_tokens; every request's greedy output is bit-identical
@@ -136,6 +137,7 @@ def test_continuous_matches_solo_bitwise(setup):
         assert len(served.out_tokens) == n
 
 
+@pytest.mark.slow
 def test_chunked_admission_matches_blocking(setup):
     """Acceptance: chunked (interleaved) admission reproduces blocking
     admission token-for-token on a ragged queue, for both runtimes."""
@@ -158,6 +160,7 @@ def test_chunked_admission_matches_blocking(setup):
         assert outs["chunked"] == outs["blocking"], runtime
 
 
+@pytest.mark.slow
 def test_fused_attn_impl_matches_jnp(setup):
     """Acceptance: the gather-free fused decode attention reproduces the jnp
     reference token-for-token through the serving engine (ragged queue,
@@ -280,6 +283,134 @@ def test_engine_runs_across_flush_boundary(setup):
     assert m.tokens_out == 2 * n_new
     for r in reqs:
         assert all(0 <= t < CFG.vocab for t in r.out_tokens)
+
+
+def _serve_case(params, *, offload, frac=0.25, impl="jnp",
+                admission="chunked", news=(8, 6, 20)):
+    """Shared ragged scenario: 3 requests on 2 slots (slot reuse grafts a new
+    request over a retired one), generation crossing no/one flush boundary."""
+    rng = np.random.default_rng(13)
+    lens = [S, 256, 320]
+    prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32) for L in lens]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S, admission=admission, prefill_chunk=96,
+                      attn_impl=impl, offload=offload, cache_frac=frac)
+    reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, news)]
+    m = eng.serve(reqs, batch_size=2)
+    return [r.out_tokens for r in reqs], m
+
+
+def test_offload_serve_matches_direct(setup):
+    """Acceptance: host-offload decode (device block cache + cache-slot
+    indirection) reproduces the direct-store path token-for-token, and the
+    serve metrics record the wave-buffer traffic."""
+    params = setup[0]
+    ref, m0 = _serve_case(params, offload=False)
+    out, m = _serve_case(params, offload=True)
+    assert out == ref
+    assert m.cache_lookups > 0 and m.bytes_over_link > 0
+    assert 0 < m.cache_hit_ratio <= 1
+    assert m.effective_cache_hit_ratio >= m.cache_hit_ratio
+    # direct path records no cache traffic
+    assert m0.cache_lookups == 0 and m0.bytes_over_link == 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("admission", ("chunked", "blocking"))
+@pytest.mark.parametrize("impl", ("jnp", "fused"))
+def test_offload_serve_parity_matrix(setup, admission, impl):
+    """Acceptance: offload == direct token-for-token across admission modes
+    and attention impls (generation crosses a flush boundary: the flushed
+    segments are appended to the HOST store and retrieved through the
+    cache)."""
+    params = setup[0]
+    news = (8, 6, 41)                   # 41 crosses a flush boundary
+    ref, _ = _serve_case(params, offload=False, impl=impl,
+                         admission=admission, news=news)
+    out, m = _serve_case(params, offload=True, impl=impl,
+                         admission=admission, news=news)
+    assert out == ref
+    assert m.bytes_over_link > 0
+
+
+def test_offload_cache_coherent_after_flush(setup):
+    """Regression: rows with fewer live clusters than plan.r rank dead ids
+    (top_k tie-breaks NEG scores to exactly the ids the next flush will
+    allocate). Fetching those through the wave buffer would admit all-masked
+    payloads that turn into STALE hits once the flush writes real blocks at
+    those ids. Dead ids must never touch the buffer: after a flush-crossing
+    serve, every cached cluster's payload still equals its host-store row."""
+    params = setup[0]
+    rng = np.random.default_rng(13)
+    # prompts well short of max_context => n_clusters << plan.r every step
+    prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32)
+               for L in (256, 200)]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S, cache_frac=0.5, offload=True)
+    news = [CFG.retro.update_segment + 9, 6]     # row 0 crosses a flush
+    reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+            for p, n in zip(prompts, news)]
+    eng.serve(reqs, batch_size=2)
+    plane = eng._last_plane
+    checked = 0
+    for per_layer in plane.bufs:
+        for b, row in enumerate(per_layer):
+            if row is None:
+                continue
+            for buf in row:
+                mapped = np.where(buf.table.cache_slot >= 0)[0]
+                # nothing beyond the live cluster count was ever admitted
+                assert (mapped < plane.ncl[b]).all()
+                for cid in mapped:
+                    slot = buf.table.cache_slot[cid]
+                    np.testing.assert_array_equal(buf.cache[slot],
+                                                  buf.kv_host[cid])
+                    checked += 1
+    assert checked > 0
+
+
+def test_offload_eviction_pressure(setup):
+    """Cache far smaller than the per-step working set (C << r): every step
+    evicts, outputs stay correct, and the link carries real traffic."""
+    params = setup[0]
+    ref, _ = _serve_case(params, offload=False, news=(6, 5, 8))
+    out, m = _serve_case(params, offload=True, frac=0.02, news=(6, 5, 8))
+    assert out == ref
+    assert m.bytes_over_link > 0
+    assert m.cache_hit_ratio < 0.9      # pressure: far from full reuse
+    assert m.bytes_from_cache >= 0
+
+
+def test_offload_requires_retro_attention(setup):
+    params = setup[0]
+    with pytest.raises(ValueError, match="offload"):
+        ServeEngine(CFG, params, runtime="full", offload=True)
+    with pytest.raises(ValueError, match="offload"):
+        ServeEngine(CFG.replace(family="ssm"), params, runtime="retro",
+                    offload=True)
+
+
+def test_one_token_requests_excluded_from_request_tps(setup):
+    """Regression: a max_new_tokens=1 request decodes zero tokens; its 0.0
+    tok/s used to be appended to request_tps, dragging down mean/percentile
+    request throughput. The sample is now skipped (TTFT/tokens still count)."""
+    params = setup[0]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S)
+    rng = np.random.default_rng(2)
+    news = [1, 5, 1]
+    reqs = [Request(prompt=rng.integers(0, CFG.vocab, S).astype(np.int32),
+                    max_new_tokens=n) for n in news]
+    m = eng.serve(reqs, batch_size=2)
+    for r, n in zip(reqs, news):
+        assert r.done and len(r.out_tokens) == n
+    assert m.tokens_out == sum(news)
+    assert len(m.ttft_s) == 3
+    # only the request that actually decoded contributes a tps sample
+    assert len(m.request_tps) == 1
+    assert all(t > 0 for t in m.request_tps)
+    assert float(np.mean(m.request_tps)) > 0
 
 
 def test_split_state_decode_matches_monolithic(setup):

@@ -152,6 +152,86 @@ def test_admit_clip_preserves_request_order():
     assert set(buf2.cache_owner[buf2.cache_owner >= 0]) == {7, 5}
 
 
+def test_pending_hit_byte_accounting():
+    """Regression: a pending hit (repeat miss before apply_updates) used to
+    count in NEITHER bytes_from_cache NOR bytes_over_link, and hit_ratio
+    treated it as a plain miss — understating the effective hit rate. It now
+    lands in bytes_from_pending and effective_hit_ratio includes it."""
+    buf, host = _mk(n_clusters=32, cache=8)
+    per = buf.bytes_per_cluster
+    buf.assemble(np.array([3, 5]))               # 2 fresh misses
+    buf.assemble(np.array([5, 3]))               # 2 pending hits
+    s = buf.stats
+    assert s.pending_hits == 2
+    assert s.bytes_over_link == 2 * per          # fetched once each
+    assert s.bytes_from_cache == 0
+    assert s.bytes_from_pending == 2 * per       # the pending-hit traffic
+    assert s.hit_ratio == 0.0                    # strict cache hits only
+    assert s.effective_hit_ratio == 0.5          # 2 of 4 lookups never re-cross
+    buf.apply_updates()
+    buf.assemble(np.array([3, 5]))
+    assert buf.stats.hit_ratio == pytest.approx(2 / 6)
+    assert buf.stats.effective_hit_ratio == pytest.approx(4 / 6)
+
+
+@pytest.mark.parametrize("policy", ("lru", "fifo", "clock"))
+@pytest.mark.parametrize("cache", (0, 1))
+def test_zero_and_one_slot_cache(policy, cache):
+    """cache_clusters=0 (tiny int(frac*n) configs round to zero) must degrade
+    to an explicit pass-through — correct data, all traffic over the link,
+    nothing admitted — and a one-slot cache must actually cache."""
+    buf, host = _mk(n_clusters=32, cache=cache, policy=policy)
+    assert buf.passthrough == (cache == 0)
+    per = buf.bytes_per_cluster
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        ids = rng.choice(32, size=4, replace=False)
+        out = buf.assemble(ids)
+        np.testing.assert_array_equal(out, host[ids])
+        adm = buf.apply_updates()
+        if cache == 0:
+            assert adm == []
+    s = buf.stats
+    if cache == 0:
+        assert s.hits == 0 and s.bytes_from_cache == 0
+        assert s.bytes_over_link == s.lookups * per  # every lookup crosses
+        assert np.all(buf.table.cache_slot == -1)    # nothing ever admitted
+    else:
+        assert len(buf.cache_owner) == 1
+        # repeat the cached cluster: the single slot serves it
+        cid = int(buf.cache_owner[0])
+        buf.assemble(np.array([cid]))
+        assert buf.stats.hits >= 1
+    # pending-set semantics hold in pass-through too: no double fetch
+    buf2, host2 = _mk(n_clusters=16, cache=cache, policy=policy)
+    buf2.assemble(np.array([7]))
+    buf2.assemble(np.array([7]))
+    assert buf2.stats.bytes_over_link == buf2.bytes_per_cluster
+    assert buf2.stats.pending_hits == 1
+
+
+def test_negative_cache_rejected():
+    with pytest.raises(ValueError, match="cache_clusters"):
+        _mk(cache=-1)
+
+
+def test_apply_updates_returns_admissions():
+    """The serve engine mirrors host-cache admissions into its device block
+    cache: apply_updates returns (slots, ids, payload) triples matching the
+    cache content exactly."""
+    buf, host = _mk(n_clusters=32, cache=4)
+    buf.assemble(np.array([3, 9]))
+    adm = buf.apply_updates()
+    assert len(adm) == 1
+    slots, ids, payload = adm[0]
+    np.testing.assert_array_equal(ids, [3, 9])
+    np.testing.assert_array_equal(payload, host[[3, 9]])
+    np.testing.assert_array_equal(buf.cache[slots], payload)
+    for s, c in zip(slots, ids):
+        assert buf.table.cache_slot[c] == s
+    assert buf.apply_updates() == []             # drained
+
+
 def test_transfer_accounting():
     buf, host = _mk(n_clusters=16, cache=4, payload=32)
     per = host[0].nbytes

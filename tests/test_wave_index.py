@@ -270,6 +270,7 @@ def test_chunked_prefill_matches_build_exactly(chunk):
     _assert_states_equal(out, ref)
 
 
+@pytest.mark.slow
 def test_chunked_prefill_per_row_rates():
     """Rows of one batch may stream at different rates (per-row chunk_lens);
     once they converge to the same total the state matches the monolithic
