@@ -1,0 +1,24 @@
+"""retrolint — static + trace-time contract checking for the serve hot path.
+
+Three passes guard the invariants PRs 3-5 bought the decode loop:
+
+* ``ast_rules``   — source-level lint (host syncs in hot-path functions,
+                    Python control flow on traced values, ``jax.jit`` built
+                    inside loops, reuse of donated buffers).
+* ``jaxpr_check`` — trace-time contracts over the engine's jitted serve
+                    stages (no callback/transfer primitives, every
+                    ``donate_argnums`` entry really aliases an output, each
+                    stage compiles exactly once across a mixed serve run).
+* ``pallas_check`` — kernel-level analysis of the wave-attention Pallas
+                    kernels (wait-before-reuse on the double-buffered DMA
+                    scratch, BlockSpec index-map purity, static VMEM budget).
+
+Run all of it with ``python -m repro.launch.lint`` (see ``--help`` /
+``--explain <rule>``); rules and the pragma syntax are documented in
+``README.md`` next to this file.
+"""
+from repro.analysis.findings import (Finding, RULES, explain_rule,
+                                     load_baseline, write_baseline)
+
+__all__ = ["Finding", "RULES", "explain_rule", "load_baseline",
+           "write_baseline"]

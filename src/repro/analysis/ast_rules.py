@@ -1,0 +1,469 @@
+"""Source-level lint rules (RL001-RL004) over the repro tree.
+
+The pass is purely lexical — no imports are executed. Each rule documents
+its (known, intentional) imprecision in ``findings.RULES``; the design goal
+is zero false positives on the shipped tree with pragmas only at the
+sanctioned sync sites, not completeness against adversarial code.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.findings import Finding, Pragmas
+
+# Functions on the decode hot path by qualname, per repo-relative path
+# suffix. Functions tagged `# retrolint: hot` on their def line are hot
+# everywhere, config-free (new code should prefer the tag).
+HOT_PATHS: Dict[str, Tuple[str, ...]] = {
+    "src/repro/serving/engine.py": (
+        "ServeEngine.serve",
+        "ServeEngine._sample",
+        "_OffloadPlane.decode_step",
+        "_OffloadPlane.flush",
+        "_OffloadPlane.admit_slot",
+        "_OffloadPlane._translate",
+        "_OffloadPlane._drain_admissions",
+    ),
+}
+
+# (module alias attr chain) call patterns that block on the device stream
+_SYNC_FUNCS = {("np", "asarray"), ("np", "array"), ("numpy", "asarray"),
+               ("numpy", "array"), ("jax", "device_get"),
+               ("jax", "block_until_ready")}
+_SYNC_METHODS = {"item", "block_until_ready"}
+
+# attribute/metadata accesses that yield STATIC (untraced) values
+_UNTAINT_ATTRS = {"shape", "ndim", "dtype", "size"}
+_UNTAINT_CALLS = {"len", "range", "enumerate", "zip", "isinstance", "type",
+                  "getattr", "hasattr"}
+
+
+def _attr_chain(node: ast.AST) -> Tuple[str, ...]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+def _is_jax_jit(node: ast.AST) -> bool:
+    """True for the expression ``jax.jit`` (or a bare ``jit`` import)."""
+    chain = _attr_chain(node)
+    return chain in (("jax", "jit"), ("jit",))
+
+
+def _jit_call_info(call: ast.Call) -> Optional[dict]:
+    """If ``call`` constructs a jit (``jax.jit(...)`` or
+    ``[functools.]partial(jax.jit, ...)``), return its keyword info."""
+    if isinstance(call.func, (ast.Attribute, ast.Name)) \
+            and _is_jax_jit(call.func):
+        return {"kw": {k.arg: k.value for k in call.keywords}}
+    chain = _attr_chain(call.func)
+    if chain and chain[-1] == "partial" and call.args \
+            and _is_jax_jit(call.args[0]):
+        return {"kw": {k.arg: k.value for k in call.keywords}}
+    return None
+
+
+def _literal_or_none(node: Optional[ast.AST]):
+    try:
+        return ast.literal_eval(node) if node is not None else None
+    except (ValueError, TypeError):
+        return None
+
+
+def _jitted_decorator(fn: ast.FunctionDef) -> Optional[dict]:
+    """jit info if the def is decorated @jax.jit / @partial(jax.jit, ...)."""
+    for dec in fn.decorator_list:
+        if isinstance(dec, (ast.Attribute, ast.Name)) and _is_jax_jit(dec):
+            return {"kw": {}}
+        if isinstance(dec, ast.Call):
+            info = _jit_call_info(dec)
+            if info is not None:
+                return info
+    return None
+
+
+class _QualnameVisitor(ast.NodeVisitor):
+    """Base visitor tracking the enclosing def/class qualname."""
+
+    def __init__(self) -> None:
+        self.stack: List[str] = []
+
+    @property
+    def qualname(self) -> str:
+        return ".".join(self.stack) or "<module>"
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    def _visit_fn(self, node):
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+
+# ------------------------------------------------------------------- RL001
+def _check_hot_syncs(tree: ast.Module, path: str, pragmas: Pragmas,
+                     hot_qualnames: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+
+    class V(_QualnameVisitor):
+        def __init__(self) -> None:
+            super().__init__()
+            self.hot_depth = 0
+
+        def _visit_fn(self, node):
+            is_hot = False
+            self.stack.append(node.name)
+            if self.qualname in hot_qualnames \
+                    or pragmas.marks_hot(node.lineno):
+                is_hot = True
+            self.hot_depth += is_hot
+            self.generic_visit(node)
+            self.hot_depth -= is_hot
+            self.stack.pop()
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+        def visit_Call(self, node: ast.Call) -> None:
+            if self.hot_depth:
+                chain = _attr_chain(node.func)
+                hit = None
+                if chain[-2:] in _SYNC_FUNCS or chain in _SYNC_FUNCS:
+                    hit = ".".join(chain)
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in _SYNC_METHODS \
+                        and len(chain) != 2:
+                    # x.item() / x.block_until_ready(); the len-2 module
+                    # forms (jax.block_until_ready) are handled above
+                    hit = f".{node.func.attr}()"
+                if hit and not (pragmas.sanctions_sync(node.lineno)
+                                or pragmas.ignores(node.lineno, "RL001")):
+                    findings.append(Finding(
+                        "RL001", path, node.lineno, self.qualname,
+                        f"host sync `{hit}` on the decode hot path without "
+                        f"a `# retrolint: sync(<reason>)` pragma"))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return findings
+
+
+# ------------------------------------------------------------------- RL002
+class _TaintChecker:
+    """Per-function taint walk: parameters of a jitted function (minus
+    static_argnames) are traced; flag Python control flow on traced values."""
+
+    def __init__(self, fn: ast.FunctionDef, static_names: Set[str]) -> None:
+        self.fn = fn
+        args = fn.args
+        names = [a.arg for a in
+                 args.posonlyargs + args.args + args.kwonlyargs]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        if args.kwarg:
+            names.append(args.kwarg.arg)
+        self.tainted: Set[str] = {n for n in names if n not in static_names}
+
+    def expr_tainted(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.tainted
+        if isinstance(node, ast.Attribute):
+            if node.attr in _UNTAINT_ATTRS:
+                return False
+            return self.expr_tainted(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.expr_tainted(node.value)
+        if isinstance(node, (ast.BinOp,)):
+            return self.expr_tainted(node.left) or \
+                self.expr_tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.expr_tainted(node.operand)
+        if isinstance(node, ast.BoolOp):
+            return any(self.expr_tainted(v) for v in node.values)
+        if isinstance(node, ast.Compare):
+            # `is (not) None` and friends are static identity checks
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return False
+            return self.expr_tainted(node.left) or \
+                any(self.expr_tainted(c) for c in node.comparators)
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if chain and chain[0] in _UNTAINT_CALLS and len(chain) == 1:
+                return False
+            return any(self.expr_tainted(a) for a in node.args) or \
+                any(self.expr_tainted(k.value) for k in node.keywords)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.expr_tainted(e) for e in node.elts)
+        if isinstance(node, ast.IfExp):
+            return any(self.expr_tainted(e)
+                       for e in (node.test, node.body, node.orelse))
+        return False
+
+    def run(self, path: str, qualname: str,
+            pragmas: Pragmas) -> List[Finding]:
+        findings: List[Finding] = []
+
+        def flag(node, what, expr):
+            if not pragmas.ignores(node.lineno, "RL002"):
+                findings.append(Finding(
+                    "RL002", path, node.lineno, qualname,
+                    f"Python `{what}` on a traced value inside a jitted "
+                    f"function (use lax.cond/select/scan)"))
+
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.Assign):
+                if self.expr_tainted(node.value):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                self.tainted.add(n.id)
+        for node in ast.walk(self.fn):
+            if isinstance(node, ast.If) and self.expr_tainted(node.test):
+                flag(node, "if", node.test)
+            elif isinstance(node, ast.While) \
+                    and self.expr_tainted(node.test):
+                flag(node, "while", node.test)
+            elif isinstance(node, ast.For) and self.expr_tainted(node.iter):
+                flag(node, "for", node.iter)
+        return findings
+
+
+def _check_traced_branches(tree: ast.Module, path: str,
+                           pragmas: Pragmas) -> List[Finding]:
+    findings: List[Finding] = []
+
+    class V(_QualnameVisitor):
+        def _visit_fn(self, node):
+            self.stack.append(node.name)
+            info = _jitted_decorator(node)
+            if info is not None:
+                statics = _literal_or_none(
+                    info["kw"].get("static_argnames")) or ()
+                if isinstance(statics, str):
+                    statics = (statics,)
+                findings.extend(
+                    _TaintChecker(node, set(statics)).run(
+                        path, self.qualname, pragmas))
+            self.generic_visit(node)
+            self.stack.pop()
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+    V().visit(tree)
+    return findings
+
+
+# ------------------------------------------------------------------- RL003
+def _check_jit_in_loop(tree: ast.Module, path: str,
+                       pragmas: Pragmas) -> List[Finding]:
+    findings: List[Finding] = []
+
+    class V(_QualnameVisitor):
+        def __init__(self) -> None:
+            super().__init__()
+            self.loop_depth = 0
+
+        def _visit_loop(self, node):
+            self.loop_depth += 1
+            self.generic_visit(node)
+            self.loop_depth -= 1
+
+        visit_For = _visit_loop
+        visit_While = _visit_loop
+        visit_AsyncFor = _visit_loop
+
+        def _visit_fn(self, node):
+            # a def inside a loop resets the loop context: building a jit
+            # inside a (cached) builder that happens to sit in a loop is
+            # the builder's problem, not this call site's
+            saved, self.loop_depth = self.loop_depth, 0
+            self.stack.append(node.name)
+            self.generic_visit(node)
+            self.stack.pop()
+            self.loop_depth = saved
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+        def visit_Call(self, node: ast.Call) -> None:
+            if self.loop_depth and _jit_call_info(node) is not None \
+                    and not pragmas.ignores(node.lineno, "RL003"):
+                findings.append(Finding(
+                    "RL003", path, node.lineno, self.qualname,
+                    "jax.jit constructed inside a loop body (fresh "
+                    "compilation cache every iteration) — hoist it out"))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return findings
+
+
+# ------------------------------------------------------------------- RL004
+def _donated_bindings(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """Names (or attribute names: ``self._graft`` -> ``_graft``) bound to a
+    jit with literal donate_argnums, module-wide. Also covers decorated
+    defs (the def's own name is the binding)."""
+    out: Dict[str, Tuple[int, ...]] = {}
+
+    def record(target: ast.AST, don) -> None:
+        if don is None:
+            return
+        don = (don,) if isinstance(don, int) else tuple(don)
+        if isinstance(target, ast.Name):
+            out[target.id] = don
+        elif isinstance(target, ast.Attribute):
+            out[target.attr] = don
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            call = node.value
+            # f = jax.jit(g, donate_argnums=...) and
+            # f = partial(jax.jit, donate_argnums=...)(g)
+            for c in ast.walk(call):
+                if isinstance(c, ast.Call):
+                    info = _jit_call_info(c)
+                    if info is not None:
+                        don = _literal_or_none(
+                            info["kw"].get("donate_argnums"))
+                        for t in node.targets:
+                            record(t, don)
+        elif isinstance(node, ast.FunctionDef):
+            info = _jitted_decorator(node)
+            if info is not None:
+                don = _literal_or_none(info["kw"].get("donate_argnums"))
+                record(ast.Name(id=node.name), don)
+    return out
+
+
+def _name_of(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):        # track `adm.cstate` textually
+        chain = _attr_chain(node)
+        return ".".join(chain) if chain else None
+    return None
+
+
+def _check_donated_reuse(tree: ast.Module, path: str,
+                         pragmas: Pragmas) -> List[Finding]:
+    donors = _donated_bindings(tree)
+    if not donors:
+        return []
+    findings: List[Finding] = []
+
+    class V(_QualnameVisitor):
+        def _visit_fn(self, fn):
+            self.stack.append(fn.name)
+            self._scan_fn(fn, self.qualname)
+            self.generic_visit(fn)
+            self.stack.pop()
+
+        visit_FunctionDef = _visit_fn
+        visit_AsyncFunctionDef = _visit_fn
+
+        def _scan_fn(self, fn, qualname: str) -> None:
+            loads: Dict[str, List[int]] = {}
+            stores: Dict[str, List[int]] = {}
+            loops: List[Tuple[int, int]] = []
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.For, ast.While)):
+                    loops.append((node.lineno, node.end_lineno or node.lineno))
+                nm = _name_of(node)
+                if nm is None:
+                    continue
+                ctx = getattr(node, "ctx", None)
+                if isinstance(ctx, ast.Load):
+                    loads.setdefault(nm, []).append(node.lineno)
+                elif isinstance(ctx, (ast.Store, ast.Del)):
+                    stores.setdefault(nm, []).append(node.lineno)
+
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = _name_of(node.func)
+                short = callee.rsplit(".", 1)[-1] if callee else None
+                if short not in donors:
+                    continue
+                for pos in donors[short]:
+                    if pos >= len(node.args):
+                        continue
+                    arg = _name_of(node.args[pos])
+                    if arg is None:
+                        continue
+                    line = node.lineno
+                    if pragmas.ignores(line, "RL004"):
+                        continue
+                    later = [ln for ln in loads.get(arg, []) if ln > line]
+                    rebinds = stores.get(arg, [])
+                    bad = next(
+                        (ln for ln in later
+                         if not any(line <= s <= ln for s in rebinds)),
+                        None)
+                    if bad is not None:
+                        findings.append(Finding(
+                            "RL004", path, bad, qualname,
+                            f"`{arg}` was donated to `{short}` (arg {pos}) "
+                            f"and is read again after the call — rebind it "
+                            f"from the result"))
+                        continue
+                    # call sits in a loop and the donated name is never
+                    # rebound inside it: iteration 2 re-donates a dead buffer
+                    for lo, hi in loops:
+                        if lo <= line <= hi and not any(
+                                lo <= s <= hi for s in rebinds):
+                            findings.append(Finding(
+                                "RL004", path, line, qualname,
+                                f"`{arg}` is donated to `{short}` inside a "
+                                f"loop but never rebound in the loop body — "
+                                f"the next iteration reuses a donated "
+                                f"buffer"))
+                            break
+
+    V().visit(tree)
+    return findings
+
+
+# ------------------------------------------------------------------ driver
+def lint_source(source: str, path: str,
+                hot_qualnames: Sequence[str] = ()) -> List[Finding]:
+    """All AST rules over one file's source. ``path`` is repo-relative."""
+    tree = ast.parse(source, filename=path)
+    pragmas = Pragmas.scan(source)
+    hot = tuple(hot_qualnames)
+    for suffix, quals in HOT_PATHS.items():
+        if path.endswith(suffix) or suffix.endswith(path):
+            hot = hot + quals
+    findings = []
+    findings += _check_hot_syncs(tree, path, pragmas, hot)
+    findings += _check_traced_branches(tree, path, pragmas)
+    findings += _check_jit_in_loop(tree, path, pragmas)
+    findings += _check_donated_reuse(tree, path, pragmas)
+    return findings
+
+
+def lint_tree(root: str, subdirs: Iterable[str] = ("src",)) -> List[Finding]:
+    findings: List[Finding] = []
+    for sub in subdirs:
+        base = os.path.join(root, sub)
+        for dirpath, _dirs, files in os.walk(base):
+            for name in sorted(files):
+                if not name.endswith(".py"):
+                    continue
+                full = os.path.join(dirpath, name)
+                rel = os.path.relpath(full, root).replace(os.sep, "/")
+                with open(full) as f:
+                    findings += lint_source(f.read(), rel)
+    return findings

@@ -1,0 +1,255 @@
+"""Finding/rule plumbing shared by every retrolint pass.
+
+A ``Finding`` is one rule violation at one source location. Its
+``fingerprint`` deliberately excludes the line number — baselines must
+survive unrelated edits above a suppressed site — and hashes the rule id,
+repo-relative path, enclosing qualname, and a normalized message instead.
+
+Suppression has three layers, narrowest wins:
+
+* ``# retrolint: sync(<reason>)`` on the flagged line — sanctions exactly one
+  host sync (RL001); the reason is mandatory and surfaces in ``--explain``ed
+  listings, so every sanctioned sync documents itself.
+* ``# retrolint: ignore(RLxxx: <reason>)`` on the flagged line — suppresses
+  the named rule at that site.
+* the checked-in baseline file — fingerprints of known findings; the CLI
+  fails only on findings NOT in the baseline, so adopting a new rule never
+  blocks on legacy sites.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PRAGMA_RE = re.compile(r"#\s*retrolint:\s*(sync|ignore|hot)\s*(?:\(([^)]*)\))?")
+
+
+@dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    title: str
+    summary: str                # one line, shown in listings
+    explain: str                # long form, shown by --explain
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str                   # repo-relative, "/" separators
+    line: int
+    qualname: str               # enclosing def/class chain (or stage name)
+    message: str
+    severity: str = "error"     # "error" fails the gate; "advice" never does
+
+    @property
+    def fingerprint(self) -> str:
+        norm = re.sub(r"\d+", "#", self.message)    # shape/count agnostic
+        h = hashlib.sha1(
+            f"{self.rule}|{self.path}|{self.qualname}|{norm}".encode()
+        ).hexdigest()[:12]
+        return f"{self.rule}:{self.path}:{self.qualname}:{h}"
+
+    def render(self) -> str:
+        sev = "" if self.severity == "error" else f" [{self.severity}]"
+        return (f"{self.path}:{self.line}: {self.rule}{sev} "
+                f"({self.qualname}) {self.message}")
+
+
+# --------------------------------------------------------------------- rules
+RULES: Dict[str, Rule] = {}
+
+
+def _rule(rule_id: str, title: str, summary: str, explain: str) -> None:
+    RULES[rule_id] = Rule(rule_id, title, summary, explain)
+
+
+_rule(
+    "RL001", "host-sync-in-hot-path",
+    "Host-sync call inside a decode hot-path function without a sync pragma.",
+    """Functions on the decode hot path (listed in ast_rules.HOT_PATHS, or
+tagged `# retrolint: hot` on their def line) may not call np.asarray /
+np.array on device values, jax.device_get, .item(), or
+block_until_ready(): each one blocks the Python scheduler on the device
+stream and silently serializes the sync-free decode loop (PR 3) or the
+offload control plane (PR 5). The engine keeps exactly one sanctioned sync
+per concern; each is annotated in place:
+
+    ids = np.asarray(idx_r)  # retrolint: sync(per-layer ids readback)
+
+Fix: keep the value on device (sample on device, feed device-to-device), or
+move the transfer off the per-step path. If the sync is load-bearing,
+annotate it with `# retrolint: sync(<why this one is allowed>)`.""")
+
+_rule(
+    "RL002", "traced-python-control-flow",
+    "Python if/for/while on a traced value inside a jitted function.",
+    """Inside a function compiled with jax.jit, Python `if`, `while`, and
+`for` execute at TRACE time. Branching on a traced value either raises a
+ConcretizationTypeError or — worse — silently bakes one branch into the
+compiled artifact and recompiles per value. Use lax.cond / lax.select /
+jnp.where for data-dependent branches and lax.fori_loop / lax.scan for
+data-dependent trip counts. Static configuration (None checks, shapes,
+dtypes, static_argnames) is fine and not flagged.
+
+The pass is lexical: it only inspects functions it can SEE are jitted
+(decorated with @jax.jit / @partial(jax.jit, ...) or wrapped by name in the
+same scope) and tracks taint from their non-static parameters.""")
+
+_rule(
+    "RL003", "jit-inside-loop",
+    "jax.jit(...) constructed inside a Python loop body.",
+    """Each jax.jit(...) call creates a fresh compilation cache: building one
+inside a `for`/`while` body recompiles every iteration and leaks executables.
+Hoist the jit out of the loop (module scope, or a cached builder keyed on the
+static geometry — see ServeEngine._decode_fns for the idiom).""")
+
+_rule(
+    "RL004", "reuse-after-donation",
+    "A value passed at a donated argument position is read again later.",
+    """Arguments listed in donate_argnums are INVALIDATED by the call: the
+buffer is aliased into the outputs and reading the old reference afterwards
+raises (or, pre-deletion, observes clobbered memory). The flagged name was
+passed at a donated position and is loaded again after the call (or on the
+next loop iteration) without being rebound. Rebind the name from the call's
+result (`state = fin(state, ...)`) or drop the donation.""")
+
+_rule(
+    "RL101", "callback-primitive-in-stage",
+    "A jitted serve stage traces a callback / host-transfer primitive.",
+    """The decode-loop contract is that every jitted stage is pure device
+compute: host work happens only at the annotated control-plane points
+between stages. A pure_callback / io_callback / debug_callback / device_put
+primitive inside a stage jaxpr reintroduces a hidden per-step host
+round-trip that no wall-clock test reliably catches. Move the host work to
+the control plane (see _OffloadPlane.decode_step) or delete it.""")
+
+_rule(
+    "RL102", "donation-not-aliased",
+    "A donate_argnums entry does not alias any output (silent copy), or a "
+    "stage is missing its contracted donation.",
+    """jax only honours donate_argnums when an output with matching
+shape/dtype exists; otherwise the donation silently degrades to a full
+copy (XLA emits a UserWarning once, then the copy runs forever). The
+checker lowers every recorded serve stage and requires each donated leaf to
+carry a tf.aliasing_output attribute. It also enforces the per-stage
+donation contract (serving.engine.SERVE_STAGES): a stage that updates a
+large buffer in place must declare the donation, or every step pays a
+defensive copy of the whole buffer.""")
+
+_rule(
+    "RL103", "recompile-budget-exceeded",
+    "A jitted serve stage compiled more (or less) often than its budget.",
+    """Across a mixed serve run every stage compiles a fixed number of times:
+once per engine geometry for the step stages, once per distinct prompt
+length for the finalize/prefill entries. More compiles means a shape or
+static argument leaks per-step state into the jit key (the classic
+regression: a Python scalar that should be a device array); zero compiles
+means the stage was renamed or silently bypassed and the contract no longer
+measures it.""")
+
+_rule(
+    "RL104", "missed-donation",
+    "An un-donated stage input has an identically-shaped output (advice).",
+    """Heuristic, advisory only: the stage returns a value with exactly the
+shape/dtype of a large un-donated input, which usually means an in-place
+update paying a full defensive copy. Donate the argument if the caller
+never reuses the old reference (then add it to SERVE_STAGES so RL102
+enforces it); ignore if the output is genuinely fresh data.""")
+
+_rule(
+    "RL201", "dma-wait-before-reuse",
+    "Double-buffered DMA scratch read/overwritten without an awaited copy.",
+    """The paged kernel's cluster walk streams cluster j+1's blocks into one
+half of a 2-slot VMEM scratch while folding cluster j from the other half.
+That is only sound if (a) every scratch read is preceded by a wait() on the
+same slot's semaphore, (b) no DMA is started into a slot whose previous
+transfer has not been awaited, and (c) no DMA overwrites a slot whose
+contents have not been folded yet. The checker extracts the start/wait/read
+event sequence from the kernel AST (inlining the dma helper and the
+fori_loop body) and model-checks the slot state machine over unrolled
+iterations. A violated ordering is a silent data race on real hardware —
+interpret-mode tests cannot see it because the interpreter serializes
+DMAs.""")
+
+_rule(
+    "RL202", "impure-blockspec-index-map",
+    "BlockSpec index map does something other than pure index arithmetic.",
+    """BlockSpec index maps run at every grid step to pick the next block;
+Pallas assumes they are pure functions of the grid indices (plus
+scalar-prefetch refs). Side effects, captured mutable state, or calls
+outside simple index arithmetic (jnp.clip and friends) make the automatic
+pipeline's prefetch order undefined. Keep maps to arithmetic on the grid
+indices and subscripts of scalar-prefetch ref parameters.""")
+
+_rule(
+    "RL203", "vmem-budget-exceeded",
+    "Static VMEM footprint estimate exceeds the configured budget.",
+    """Sums every pltpu.VMEM scratch allocation plus 2x (pipeline double
+buffering) each BlockSpec block in the kernel builders, with symbolic dims
+resolved from the geometry env (see --geometry). The estimate is a
+conservative upper bound (both cluster-walk flavors counted); exceeding the
+budget means the kernel will spill or fail to fit at that geometry — shrink
+block_l / cluster_cap or re-tile before it reaches hardware.""")
+
+
+def explain_rule(rule_id: str) -> Optional[str]:
+    r = RULES.get(rule_id)
+    if r is None:
+        return None
+    return f"{r.rule_id} — {r.title}\n\n{r.summary}\n\n{r.explain}\n"
+
+
+# ------------------------------------------------------------------ pragmas
+@dataclass
+class Pragmas:
+    """Per-file pragma index: line -> (kind, payload)."""
+    by_line: Dict[int, List] = field(default_factory=dict)
+
+    @classmethod
+    def scan(cls, source: str) -> "Pragmas":
+        p = cls()
+        for i, text in enumerate(source.splitlines(), start=1):
+            for m in PRAGMA_RE.finditer(text):
+                p.by_line.setdefault(i, []).append(
+                    (m.group(1), (m.group(2) or "").strip()))
+        return p
+
+    def sanctions_sync(self, line: int) -> bool:
+        return any(k == "sync" and payload
+                   for k, payload in self.by_line.get(line, []))
+
+    def ignores(self, line: int, rule_id: str) -> bool:
+        return any(k == "ignore" and rule_id in payload
+                   for k, payload in self.by_line.get(line, []))
+
+    def marks_hot(self, line: int) -> bool:
+        return any(k == "hot" for k, _ in self.by_line.get(line, []))
+
+
+# ----------------------------------------------------------------- baseline
+def load_baseline(path: str) -> set:
+    try:
+        with open(path) as f:
+            return {ln.strip() for ln in f
+                    if ln.strip() and not ln.lstrip().startswith("#")}
+    except FileNotFoundError:
+        return set()
+
+
+def write_baseline(path: str, findings: List[Finding]) -> None:
+    with open(path, "w") as f:
+        f.write("# retrolint suppression baseline — one fingerprint per "
+                "line.\n# Regenerate with: python -m repro.launch.lint "
+                "--write-baseline\n")
+        for fp in sorted({x.fingerprint for x in findings
+                          if x.severity == "error"}):
+            f.write(fp + "\n")
+
+
+def apply_baseline(findings: List[Finding], baseline: set) -> List[Finding]:
+    """Errors whose fingerprint is baselined are dropped; advice passes
+    through untouched (it never gates)."""
+    return [f for f in findings
+            if f.severity != "error" or f.fingerprint not in baseline]

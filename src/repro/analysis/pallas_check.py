@@ -1,0 +1,548 @@
+"""Pallas kernel analysis (RL201-RL203) over the wave-attention kernels.
+
+* RL201 — a bounded model check of the double-buffered DMA cluster walk:
+  the kernel AST is symbolically executed (the ``dmas`` helper inlined, the
+  ``fori_loop`` body unrolled for a model trip count, ``pl.when`` guards
+  evaluated where concrete), producing a start/wait/read event sequence per
+  (scratch buffer, slot). A slot state machine then rejects reads of
+  un-awaited slots, DMA starts into in-flight or unread slots, waits with
+  nothing in flight, and copies left in flight at kernel end.
+* RL202 — BlockSpec index maps restricted to pure index arithmetic (grid
+  indices, scalar-prefetch subscripts, and a short allowlist of clamping
+  helpers).
+* RL203 — a static VMEM footprint estimate per kernel builder: every
+  ``pltpu.VMEM`` scratch allocation plus 2x (pipeline double buffering) each
+  BlockSpec block, with symbolic dims resolved from a geometry env, held
+  against a configurable budget.
+
+All three are deliberately conservative about what they can't resolve: an
+unevaluable ``pl.when`` guard is assumed taken, an unknown dim resolves to a
+generous default — the goal is catching the silent-on-CPU bug classes
+(interpret mode serializes DMAs, so no test sees a wait-before-reuse race).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis.findings import Finding, Pragmas
+
+# geometry env for symbolic dims in scratch/block shapes (paper-scale
+# defaults; override via --geometry). Unknown names fall back to _default —
+# generous, so an unmodeled dim over-counts rather than hides.
+GEOMETRY_DEFAULTS: Dict[str, int] = {
+    "G": 8, "hd": 128, "cap": 128, "block_l": 512, "block_t": 512,
+    "Ss": 128, "E": 512, "r": 16, "dtype_bytes": 4, "_default": 128,
+}
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024      # 16 MiB per-core VMEM
+
+_MODEL_TRIPS = 4        # unrolled fori_loop iterations for the DMA model
+
+_DTYPE_BYTES = {"float32": 4, "int32": 4, "uint32": 4, "bfloat16": 2,
+                "float16": 2, "int8": 1, "uint8": 1, "float64": 8,
+                "int64": 8, "bool_": 1, "bool": 1}
+
+_INDEX_MAP_CALLS = {
+    ("jnp", "clip"), ("jnp", "minimum"), ("jnp", "maximum"),
+    ("jnp", "where"), ("jax", "lax", "rem"), ("jax", "lax", "div"),
+    ("lax", "rem"), ("lax", "div"), ("pl", "ds"), ("pl", "dslice"),
+    ("pl", "multiple_of"),
+}
+
+
+def _chain(node: ast.AST) -> Tuple[str, ...]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return tuple(reversed(parts))
+
+
+# ============================================================ RL201 DMA model
+@dataclass
+class _Copy:
+    dst_base: str
+    dst_idx: ast.expr
+    sem_idx: Optional[ast.expr]
+    lineno: int
+
+
+@dataclass
+class _Helper:
+    params: List[str]
+    copies: List[_Copy]
+
+
+class _DmaModel:
+    """Bounded symbolic executor for one kernel function."""
+
+    NEVER, INFLIGHT, READY, CONSUMED = "never", "inflight", "ready", "read"
+
+    def __init__(self, fn: ast.FunctionDef, path: str, pragmas: Pragmas,
+                 trips: int = _MODEL_TRIPS) -> None:
+        self.fn = fn
+        self.path = path
+        self.pragmas = pragmas
+        self.env: Dict[str, Any] = {"r": trips}
+        self.trips = trips
+        self.helpers: Dict[str, _Helper] = {}
+        self.funcs: Dict[str, ast.FunctionDef] = {}
+        self.state: Dict[Tuple[str, Any], str] = {}
+        self.findings: List[Finding] = []
+        self.dst_bases: set = set()
+        for node in ast.walk(fn):       # pre-scan: which refs are DMA dsts
+            if isinstance(node, ast.Call) \
+                    and _chain(node.func)[-1:] == ("make_async_copy",) \
+                    and len(node.args) >= 2:
+                base, _ = self._ref_slot(node.args[1])
+                if base:
+                    self.dst_bases.add(base)
+
+    # ------------------------------------------------------------- utilities
+    @staticmethod
+    def _ref_slot(node: ast.AST) -> Tuple[Optional[str], Optional[ast.expr]]:
+        """``ref.at[idx]`` / ``ref[idx]`` -> (ref name, idx expr)."""
+        if isinstance(node, ast.Subscript):
+            tgt = node.value
+            if isinstance(tgt, ast.Attribute) and tgt.attr == "at" \
+                    and isinstance(tgt.value, ast.Name):
+                return tgt.value.id, node.slice
+            if isinstance(tgt, ast.Name):
+                return tgt.id, node.slice
+        if isinstance(node, ast.Name):
+            return node.id, None
+        return None, None
+
+    def _eval(self, node: Optional[ast.AST]) -> Any:
+        if node is None:
+            return None
+        if isinstance(node, ast.Constant):
+            return node.value
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id)
+        if isinstance(node, ast.BinOp):
+            a, b = self._eval(node.left), self._eval(node.right)
+            if a is None or b is None:
+                return None
+            try:
+                if isinstance(node.op, ast.Add):
+                    return a + b
+                if isinstance(node.op, ast.Sub):
+                    return a - b
+                if isinstance(node.op, ast.Mult):
+                    return a * b
+                if isinstance(node.op, ast.FloorDiv):
+                    return a // b
+                if isinstance(node.op, ast.Mod):
+                    return a % b
+            except ZeroDivisionError:
+                return None
+            return None
+        if isinstance(node, ast.UnaryOp):
+            v = self._eval(node.operand)
+            if v is None:
+                return None
+            if isinstance(node.op, ast.USub):
+                return -v
+            if isinstance(node.op, ast.Not):
+                return not v
+            return None
+        if isinstance(node, ast.Compare) and len(node.ops) == 1:
+            a, b = self._eval(node.left), self._eval(node.comparators[0])
+            if a is None or b is None:
+                return None
+            op = node.ops[0]
+            if isinstance(op, ast.Lt):
+                return a < b
+            if isinstance(op, ast.LtE):
+                return a <= b
+            if isinstance(op, ast.Gt):
+                return a > b
+            if isinstance(op, ast.GtE):
+                return a >= b
+            if isinstance(op, ast.Eq):
+                return a == b
+            if isinstance(op, ast.NotEq):
+                return a != b
+            return None
+        if isinstance(node, ast.Call):
+            ch = _chain(node.func)
+            if ch[-1:] == ("rem",) and len(node.args) == 2:
+                a, b = self._eval(node.args[0]), self._eval(node.args[1])
+                return None if a is None or b is None or b == 0 else a % b
+            if ch[-1:] in (("clip",), ("minimum",), ("maximum",)):
+                return None      # index arithmetic, value not needed
+        return None
+
+    def _flag(self, lineno: int, msg: str) -> None:
+        if not self.pragmas.ignores(lineno, "RL201"):
+            self.findings.append(Finding(
+                "RL201", self.path, lineno, self.fn.name, msg))
+
+    # --------------------------------------------------------- event machine
+    def _event(self, op: str, base: str, slot: Any, lineno: int) -> None:
+        key = (base, slot)
+        st = self.state.get(key, self.NEVER)
+        if op == "start":
+            if st == self.INFLIGHT:
+                self._flag(lineno,
+                           f"DMA started into `{base}` slot {slot} while a "
+                           f"previous copy into it is still in flight")
+            elif st == self.READY:
+                self._flag(lineno,
+                           f"DMA started into `{base}` slot {slot} whose "
+                           f"previous contents were never folded — unread "
+                           f"data would be overwritten")
+            self.state[key] = self.INFLIGHT
+        elif op == "wait":
+            if st != self.INFLIGHT:
+                self._flag(lineno,
+                           f"wait() on `{base}` slot {slot} with no DMA in "
+                           f"flight (hangs on hardware)")
+            else:
+                self.state[key] = self.READY
+        elif op == "read":
+            if st == self.INFLIGHT:
+                self._flag(lineno,
+                           f"`{base}` slot {slot} read before its DMA was "
+                           f"awaited — wait-before-reuse violated")
+            elif st == self.NEVER:
+                self._flag(lineno,
+                           f"`{base}` slot {slot} read but no DMA ever "
+                           f"filled it")
+            elif st == self.READY:
+                self.state[key] = self.CONSUMED
+
+    def _finish(self) -> None:
+        for (base, slot), st in sorted(self.state.items(),
+                                       key=lambda kv: str(kv[0])):
+            if st == self.INFLIGHT:
+                self._flag(self.fn.end_lineno or self.fn.lineno,
+                           f"DMA into `{base}` slot {slot} still in flight "
+                           f"at kernel end (never awaited)")
+
+    # ------------------------------------------------------------- execution
+    def _scan_reads(self, node: ast.AST) -> None:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Subscript) \
+                    and isinstance(sub.ctx, ast.Load) \
+                    and isinstance(sub.value, ast.Name) \
+                    and sub.value.id in self.dst_bases:
+                self._event("read", sub.value.id, self._eval(sub.slice),
+                            sub.lineno)
+
+    def _maybe_helper(self, fd: ast.FunctionDef) -> bool:
+        copies = []
+        for node in ast.walk(fd):
+            if isinstance(node, ast.Call) \
+                    and _chain(node.func)[-1:] == ("make_async_copy",) \
+                    and len(node.args) >= 2:
+                base, idx = self._ref_slot(node.args[1])
+                sem_idx = None
+                if len(node.args) >= 3:
+                    _, sem_idx = self._ref_slot(node.args[2])
+                if base:
+                    copies.append(_Copy(base, idx, sem_idx, node.lineno))
+        if copies:
+            self.helpers[fd.name] = _Helper(
+                [a.arg for a in fd.args.args], copies)
+            return True
+        return False
+
+    def _emit_helper(self, helper: _Helper, args: List[ast.expr],
+                     op: str, lineno: int) -> None:
+        binding = {p: self._eval(a) for p, a in zip(helper.params, args)}
+        saved = {p: self.env.get(p) for p in binding}
+        self.env.update(binding)
+        try:
+            for copy in helper.copies:
+                slot = self._eval(copy.dst_idx)
+                if op == "start" and copy.sem_idx is not None:
+                    if ast.dump(copy.dst_idx) != ast.dump(copy.sem_idx):
+                        self._flag(copy.lineno,
+                                   f"`{copy.dst_base}` DMA destination slot "
+                                   f"and its semaphore slot differ — the "
+                                   f"wait would not cover this copy")
+                self._event(op, copy.dst_base, slot, lineno)
+        finally:
+            self.env.update(saved)
+
+    def _when_cond(self, fd: ast.FunctionDef) -> Optional[ast.expr]:
+        for dec in fd.decorator_list:
+            if isinstance(dec, ast.Call) \
+                    and _chain(dec.func)[-1:] == ("when",) and dec.args:
+                return dec.args[0]
+        return None
+
+    def _exec(self, stmts: Sequence[ast.stmt]) -> None:
+        for st in stmts:
+            if isinstance(st, ast.FunctionDef):
+                cond = self._when_cond(st)
+                if cond is not None:        # pl.when body runs in place
+                    if self._eval(cond) is not False:
+                        self._exec(st.body)
+                elif not self._maybe_helper(st):
+                    self.funcs[st.name] = st
+            elif isinstance(st, ast.Assign):
+                self._handle_call(st.value)
+                self._scan_reads(st.value)
+                val = self._eval(st.value)
+                for t in st.targets:
+                    if isinstance(t, ast.Name):
+                        self.env[t.id] = val
+            elif isinstance(st, ast.Expr):
+                if not self._handle_call(st.value):
+                    self._scan_reads(st.value)
+            elif isinstance(st, ast.For):
+                if not self._handle_dma_for(st):
+                    self._scan_reads(st.iter)
+                    self._exec(st.body)
+            elif isinstance(st, ast.If):
+                c = self._eval(st.test)
+                if c is not False:
+                    self._exec(st.body)
+                if c is not True:
+                    self._exec(st.orelse)
+            elif isinstance(st, ast.Return):
+                if st.value is not None:
+                    self._scan_reads(st.value)
+            elif isinstance(st, (ast.With,)):
+                self._exec(st.body)
+
+    def _handle_dma_for(self, st: ast.For) -> bool:
+        """``for c in dmas(slot, jc): c.start()/c.wait()``"""
+        it = st.iter
+        if not (isinstance(it, ast.Call) and isinstance(it.func, ast.Name)
+                and it.func.id in self.helpers):
+            return False
+        op = None
+        for node in ast.walk(ast.Module(body=list(st.body),
+                                        type_ignores=[])):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("start", "wait"):
+                op = node.func.attr
+        if op is None:
+            return False
+        self._emit_helper(self.helpers[it.func.id], it.args, op, st.lineno)
+        return True
+
+    def _handle_call(self, expr: ast.AST) -> bool:
+        """fori_loop unrolling + direct copy.start()/.wait() calls."""
+        if not isinstance(expr, ast.Call):
+            return False
+        ch = _chain(expr.func)
+        if ch[-1:] == ("fori_loop",) and len(expr.args) >= 3:
+            lo = self._eval(expr.args[0])
+            hi = self._eval(expr.args[1])
+            body = expr.args[2]
+            lo = 0 if lo is None else lo
+            hi = self.trips if hi is None else hi
+            if isinstance(body, ast.Name) and body.id in self.funcs:
+                fd = self.funcs[body.id]
+                ivar = fd.args.args[0].arg if fd.args.args else None
+                for i in range(lo, min(hi, lo + 8)):
+                    if ivar:
+                        self.env[ivar] = i
+                    self._exec(fd.body)
+                return True
+        # pltpu.make_async_copy(...).start() inline
+        if isinstance(expr.func, ast.Attribute) \
+                and expr.func.attr in ("start", "wait") \
+                and isinstance(expr.func.value, ast.Call) \
+                and _chain(expr.func.value.func)[-1:] \
+                == ("make_async_copy",):
+            mk = expr.func.value
+            if len(mk.args) >= 2:
+                base, idx = self._ref_slot(mk.args[1])
+                if base:
+                    self._event(expr.func.attr, base, self._eval(idx),
+                                expr.lineno)
+                    return True
+        return False
+
+    def run(self) -> List[Finding]:
+        self._exec(self.fn.body)
+        self._finish()
+        return self.findings
+
+
+def check_dma_discipline(tree: ast.Module, path: str, pragmas: Pragmas,
+                         trips: int = _MODEL_TRIPS) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: set = set()
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and any(
+                isinstance(c, ast.Call)
+                and _chain(c.func)[-1:] == ("make_async_copy",)
+                for c in ast.walk(node)):
+            # the unrolled model revisits each site once per trip — dedup
+            for f in _DmaModel(node, path, pragmas, trips).run():
+                key = (f.line, f.fingerprint)
+                if key not in seen:
+                    seen.add(key)
+                    findings.append(f)
+    return findings
+
+
+# ====================================================== RL202 index-map purity
+def _index_map_violation(fn_node, names: Dict[str, ast.expr]) -> Optional[str]:
+    """None if pure; else a description of the first impurity."""
+    if isinstance(fn_node, ast.Name):
+        fn_node = names.get(fn_node.id)
+        if fn_node is None:
+            return None         # unresolvable reference: skip, don't guess
+    if isinstance(fn_node, ast.Lambda):
+        body: List[ast.AST] = [fn_node.body]
+    elif isinstance(fn_node, ast.FunctionDef):
+        body = list(fn_node.body)
+        for st in body:
+            if not isinstance(st, (ast.Return, ast.Expr)):
+                return f"statement `{type(st).__name__}` in index map"
+    else:
+        return None
+    allowed_call_roots: set = set()
+    for node in [n for b in body for n in ast.walk(b)]:
+        if isinstance(node, ast.Call):
+            ch = _chain(node.func)
+            if ch in _INDEX_MAP_CALLS:
+                allowed_call_roots.add(id(node.func))
+                continue
+            return f"call to `{'.'.join(ch) or '<expr>'}`"
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.NamedExpr)):
+            return "assignment inside index map"
+        if isinstance(node, (ast.Await, ast.Yield, ast.YieldFrom)):
+            return f"`{type(node).__name__.lower()}` inside index map"
+    return None
+
+
+def check_index_maps(tree: ast.Module, path: str,
+                     pragmas: Pragmas) -> List[Finding]:
+    findings: List[Finding] = []
+    # name -> lambda/def bindings, collected across every scope
+    names: Dict[str, ast.expr] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Lambda):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    names[t.id] = node.value
+        elif isinstance(node, ast.FunctionDef):
+            names.setdefault(node.name, node)
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _chain(node.func)[-1:] == ("BlockSpec",)):
+            continue
+        index_map = node.args[1] if len(node.args) >= 2 else None
+        for kw in node.keywords:
+            if kw.arg == "index_map":
+                index_map = kw.value
+        if index_map is None:
+            continue
+        why = _index_map_violation(index_map, names)
+        if why and not pragmas.ignores(node.lineno, "RL202"):
+            findings.append(Finding(
+                "RL202", path, node.lineno, "<BlockSpec>",
+                f"index map is not pure index arithmetic: {why}"))
+    return findings
+
+
+# ========================================================= RL203 VMEM budget
+def _dim_value(node: ast.AST, geom: Dict[str, int]) -> int:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return node.value
+    if isinstance(node, ast.Name):
+        return geom.get(node.id, geom.get("_default", 128))
+    if isinstance(node, ast.BinOp):
+        a, b = _dim_value(node.left, geom), _dim_value(node.right, geom)
+        if isinstance(node.op, ast.Add):
+            return a + b
+        if isinstance(node.op, ast.Sub):
+            return max(a - b, 0)
+        if isinstance(node.op, ast.Mult):
+            return a * b
+        if isinstance(node.op, ast.FloorDiv):
+            return a // max(b, 1)
+        if isinstance(node.op, ast.Mod):
+            return a % max(b, 1)
+    return geom.get("_default", 128)
+
+
+def _shape_bytes(shape_node: ast.AST, dtype_node: Optional[ast.AST],
+                 geom: Dict[str, int]) -> int:
+    if not isinstance(shape_node, (ast.Tuple, ast.List)):
+        return 0
+    n = 1
+    for el in shape_node.elts:
+        n *= max(_dim_value(el, geom), 1)
+    itemsize = geom.get("dtype_bytes", 4)
+    if dtype_node is not None:
+        ch = _chain(dtype_node)
+        if ch and ch[-1] in _DTYPE_BYTES:
+            itemsize = _DTYPE_BYTES[ch[-1]]
+    return n * itemsize
+
+
+def check_vmem_budget(tree: ast.Module, path: str, pragmas: Pragmas,
+                      geometry: Optional[Dict[str, int]] = None,
+                      budget: int = DEFAULT_VMEM_BUDGET) -> List[Finding]:
+    geom = dict(GEOMETRY_DEFAULTS)
+    geom.update(geometry or {})
+    findings: List[Finding] = []
+    for fn in tree.body:
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        total = 0
+        n_sites = 0
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            ch = _chain(node.func)
+            if ch[-1:] == ("VMEM",) and node.args:
+                total += _shape_bytes(node.args[0],
+                                      node.args[1] if len(node.args) > 1
+                                      else None, geom)
+                n_sites += 1
+            elif ch[-1:] == ("BlockSpec",) and node.args:
+                # the automatic pipeline double-buffers every block
+                total += 2 * _shape_bytes(node.args[0], None, geom)
+                n_sites += 1
+        if n_sites and total > budget \
+                and not pragmas.ignores(fn.lineno, "RL203"):
+            findings.append(Finding(
+                "RL203", path, fn.lineno, fn.name,
+                f"estimated VMEM footprint {total} bytes exceeds the "
+                f"{budget}-byte budget at the checked geometry "
+                f"({n_sites} scratch/block sites)"))
+    return findings
+
+
+# ------------------------------------------------------------------- drivers
+def check_source(source: str, path: str,
+                 geometry: Optional[Dict[str, int]] = None,
+                 vmem_budget: int = DEFAULT_VMEM_BUDGET) -> List[Finding]:
+    tree = ast.parse(source, filename=path)
+    pragmas = Pragmas.scan(source)
+    findings = check_dma_discipline(tree, path, pragmas)
+    findings += check_index_maps(tree, path, pragmas)
+    findings += check_vmem_budget(tree, path, pragmas, geometry, vmem_budget)
+    return findings
+
+
+def check_tree(root: str, subdir: str = "src/repro/kernels",
+               geometry: Optional[Dict[str, int]] = None,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET) -> List[Finding]:
+    findings: List[Finding] = []
+    base = os.path.join(root, subdir)
+    for dirpath, _dirs, files in os.walk(base):
+        for name in sorted(files):
+            if not name.endswith(".py"):
+                continue
+            full = os.path.join(dirpath, name)
+            rel = os.path.relpath(full, root).replace(os.sep, "/")
+            with open(full) as f:
+                findings += check_source(f.read(), rel, geometry, vmem_budget)
+    return findings

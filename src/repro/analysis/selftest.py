@@ -1,0 +1,319 @@
+"""retrolint self-tests: every rule against a known-good and a known-bad
+fixture.
+
+The bad fixtures double as the CI tripwire: each is a complete source
+snippet that, if seeded into ``src/``, MUST make ``repro.launch.lint`` exit
+non-zero (the good twin must stay silent). ``run_selftests()`` executes the
+whole table and returns the failures; the CLI (``--selftest``) and
+``tests/test_analysis.py`` both consume it.
+
+AST/Pallas fixtures run through the real source-level drivers. The jaxpr
+rules (RL101/RL102) are exercised with real traced functions — tiny jits
+with a deliberately smuggled callback / un-aliasable donation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List
+
+from repro.analysis.ast_rules import lint_source
+from repro.analysis.findings import Finding
+from repro.analysis.pallas_check import check_source
+
+# --------------------------------------------------------------- AST fixtures
+_RL001_BAD = '''
+import numpy as np
+
+def decode_step(state):  # retrolint: hot
+    ids = np.asarray(state.idx)           # unsanctioned host sync
+    return ids
+'''
+
+_RL001_GOOD = '''
+import numpy as np
+
+def decode_step(state):  # retrolint: hot
+    ids = np.asarray(state.idx)  # retrolint: sync(control-plane readback)
+    return ids
+
+def cold_path(state):
+    return np.asarray(state.idx)          # not a hot function: fine
+'''
+
+_RL002_BAD = '''
+import jax
+
+@jax.jit
+def f(x):
+    if x > 0:                             # traced-value branch
+        return x
+    return -x
+'''
+
+_RL002_GOOD = '''
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x, flag=None):
+    if flag is None:                      # static identity check: fine
+        x = x + 1
+    for i in range(x.shape[0]):           # shape is static: fine
+        x = x + i
+    return jnp.where(x > 0, x, -x)        # data-dependent: on device
+'''
+
+_RL003_BAD = '''
+import jax
+
+def build(fns):
+    out = []
+    for f in fns:
+        out.append(jax.jit(f))            # fresh jit cache per iteration
+    return out
+'''
+
+_RL003_GOOD = '''
+import jax
+
+def build(fns):
+    jitted = [jax.jit(f) for f in fns]    # comprehension builder: cached once
+
+    def runner(xs):
+        for f, x in zip(jitted, xs):      # calling in a loop is fine
+            f(x)
+    return runner
+'''
+
+_RL004_BAD = '''
+import jax
+from functools import partial
+
+@partial(jax.jit, donate_argnums=(0,))
+def step(state, x):
+    return state
+
+def loop(state, xs):
+    for x in xs:
+        out = step(state, x)              # state re-donated every iteration
+    return out
+'''
+
+_RL004_GOOD = '''
+import jax
+from functools import partial
+
+@partial(jax.jit, donate_argnums=(0,))
+def step(state, x):
+    return state
+
+def loop(state, xs):
+    for x in xs:
+        state = step(state, x)            # rebound from the result
+    return state
+'''
+
+# ------------------------------------------------------------ Pallas fixtures
+_RL201_GOOD = '''
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+def _db_kernel(idx_ref, kst_ref, kdb_scr, ksem, o_ref, *, r):
+    def dmas(slot, jc):
+        cid = idx_ref[0, jc]
+        return (pltpu.make_async_copy(kst_ref.at[0, cid], kdb_scr.at[slot],
+                                      ksem.at[slot]),)
+
+    for c in dmas(0, 0):                  # warm up slot 0
+        c.start()
+
+    def body(jc, carry):
+        cur = jax.lax.rem(jc, 2)
+        nxt = jax.lax.rem(jc + 1, 2)
+
+        @pl.when(jc + 1 < r)
+        def _prefetch():
+            for c in dmas(nxt, jc + 1):   # prefetch next into OTHER slot
+                c.start()
+
+        for c in dmas(cur, jc):           # await current before reading
+            c.wait()
+        o_ref[0] = kdb_scr[cur]
+        return carry
+
+    jax.lax.fori_loop(0, r, body, 0)
+'''
+
+# read without ever waiting: the headline silent data race
+_RL201_BAD_NOWAIT = _RL201_GOOD.replace(
+    """        for c in dmas(cur, jc):           # await current before reading
+            c.wait()
+""", "")
+
+# prefetch into the slot currently being folded
+_RL201_BAD_SAME_SLOT = _RL201_GOOD.replace("dmas(nxt, jc + 1)",
+                                           "dmas(cur, jc + 1)")
+
+# warm-up removed: first wait has nothing in flight
+_RL201_BAD_NO_WARMUP = _RL201_GOOD.replace(
+    """    for c in dmas(0, 0):                  # warm up slot 0
+        c.start()
+""", "")
+
+_RL202_BAD = '''
+from jax.experimental import pallas as pl
+
+def build(x, table):
+    bad = lambda b, j: (b, table.lookup(j), 0)    # arbitrary call: impure
+    return pl.BlockSpec((1, 8, 128), bad)
+'''
+
+_RL202_GOOD = '''
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def build(nlb, r):
+    lmap = lambda b, j, *_: (b, jnp.clip(j - 1, 0, nlb - 1), 0)
+    cmap = lambda b, j, idx_ref, *_: (b, idx_ref[b, j], 0, 0)
+    return pl.BlockSpec((1, 8, 128), lmap), pl.BlockSpec((1, 1, 64), cmap)
+'''
+
+_RL203_BAD = '''
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+def build_kernel():
+    return [pltpu.VMEM((4096, 4096, 4), jnp.float32)]   # 256 MiB scratch
+'''
+
+_RL203_GOOD = '''
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+def build_kernel(cap, hd):
+    return [pltpu.VMEM((2, cap, hd), jnp.float32)]
+'''
+
+
+@dataclass
+class Fixture:
+    rule: str
+    bad: str
+    good: str
+    checker: Callable[[str], List[Finding]]
+
+
+def _ast(src: str) -> List[Finding]:
+    return lint_source(src, "selftest.py")
+
+
+def _pallas(src: str) -> List[Finding]:
+    return check_source(src, "selftest.py")
+
+
+FIXTURES: List[Fixture] = [
+    Fixture("RL001", _RL001_BAD, _RL001_GOOD, _ast),
+    Fixture("RL002", _RL002_BAD, _RL002_GOOD, _ast),
+    Fixture("RL003", _RL003_BAD, _RL003_GOOD, _ast),
+    Fixture("RL004", _RL004_BAD, _RL004_GOOD, _ast),
+    Fixture("RL201", _RL201_BAD_NOWAIT, _RL201_GOOD, _pallas),
+    Fixture("RL201", _RL201_BAD_SAME_SLOT, _RL201_GOOD, _pallas),
+    Fixture("RL201", _RL201_BAD_NO_WARMUP, _RL201_GOOD, _pallas),
+    Fixture("RL202", _RL202_BAD, _RL202_GOOD, _pallas),
+    Fixture("RL203", _RL203_BAD, _RL203_GOOD, _pallas),
+]
+
+# bad fixtures by rule, exported so tests can seed them into a fake src/
+# tree and assert the CLI gate trips
+BAD_FIXTURES: Dict[str, str] = {}
+for _fx in FIXTURES:
+    BAD_FIXTURES.setdefault(_fx.rule, _fx.bad)
+
+
+# -------------------------------------------------- traced-rule self-tests
+def _selftest_rl101() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analysis.jaxpr_check import callback_findings
+    aval = (jax.ShapeDtypeStruct((8,), jnp.float32),)
+
+    def bad(x):
+        return jax.pure_callback(
+            np.sin, jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    def good(x):
+        return jnp.sin(x)
+
+    fails = []
+    if not any(f.rule == "RL101" for f in callback_findings(bad, aval, "bad")):
+        fails.append("RL101: callback stage not flagged")
+    if callback_findings(good, aval, "good"):
+        fails.append("RL101: pure stage falsely flagged")
+    return fails
+
+
+def _selftest_rl102() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.jaxpr_check import donation_findings
+    aval = (jax.ShapeDtypeStruct((128,), jnp.float32),)
+
+    def update(x):
+        return x + 1.0                      # same shape: donation aliases
+
+    def reduce(x):
+        return jnp.sum(x)                   # no matching output: silent copy
+
+    good = jax.jit(update, donate_argnums=(0,))
+    bad = jax.jit(reduce, donate_argnums=(0,))
+    fails = []
+    if donation_findings(good, aval, (0,), (0,), "good"):
+        fails.append("RL102: aliasing donation falsely flagged")
+    if not any(f.rule == "RL102"
+               for f in donation_findings(bad, aval, (0,), (0,), "bad")):
+        fails.append("RL102: non-aliasing donation not flagged")
+    if not any(f.rule == "RL102"
+               for f in donation_findings(good, aval, (), (0,), "missing")):
+        fails.append("RL102: missing contracted donation not flagged")
+    return fails
+
+
+def _selftest_rl103() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    from repro.analysis.jaxpr_check import CompileLog
+
+    def shapely_stage(x):
+        return x * 2.0
+
+    jitted = jax.jit(shapely_stage)
+    with CompileLog() as clog:
+        jitted(jnp.zeros((4,), jnp.float32))
+        jitted(jnp.zeros((4,), jnp.float32))    # cache hit: no recompile
+        jitted(jnp.zeros((8,), jnp.float32))    # new shape: recompile
+    n = clog.counts.get("shapely_stage", 0)
+    if n != 2:
+        return [f"RL103: compile log counted {n} compiles, expected 2"]
+    return []
+
+
+def run_selftests(include_traced: bool = True) -> List[str]:
+    """Run every fixture; return failure descriptions (empty = all pass)."""
+    fails: List[str] = []
+    for i, fx in enumerate(FIXTURES):
+        bad_hits = [f for f in fx.checker(fx.bad) if f.rule == fx.rule]
+        if not bad_hits:
+            fails.append(f"{fx.rule} (fixture {i}): bad snippet not flagged")
+        good_hits = [f for f in fx.checker(fx.good)
+                     if f.severity == "error"]
+        if good_hits:
+            fails.append(
+                f"{fx.rule} (fixture {i}): good snippet flagged: "
+                f"{good_hits[0].render()}")
+    if include_traced:
+        fails += _selftest_rl101()
+        fails += _selftest_rl102()
+        fails += _selftest_rl103()
+    return fails

@@ -7,8 +7,7 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
-                                RetroConfig)
+from repro.configs.base import InputShape, ModelConfig, RetroConfig
 
 ARCH_IDS = (
     "zamba2_1p2b",

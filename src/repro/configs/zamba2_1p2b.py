@@ -1,6 +1,5 @@
 """zamba2-1.2b — Mamba2 backbone + shared attention blocks [arXiv:2411.15242]."""
 from repro.configs.base import AttnConfig, ModelConfig, SSMConfig
-from repro.configs import registry as _r
 
 CONFIG = ModelConfig(
     arch_id="zamba2-1.2b", family="hybrid",

@@ -19,8 +19,6 @@ tests/test_distributed.py.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

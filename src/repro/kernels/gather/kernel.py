@@ -10,7 +10,6 @@ writes it to the contiguous output. This is the paged-attention gather idiom;
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 

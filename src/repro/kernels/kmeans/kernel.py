@@ -9,7 +9,6 @@ counts are produced in one pass; the iteration loop lives in ops.py.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

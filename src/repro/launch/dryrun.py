@@ -25,7 +25,6 @@ from repro.launch import sharding as S
 from repro.launch.mesh import make_production_mesh
 from repro.models import model as M
 from repro.serving.steps import make_step
-from repro.training.optimizer import AdamWConfig, AdamWState
 from repro.training.train_loop import TrainState
 
 
@@ -102,8 +101,6 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 cold_sp, hot_sp = split_state(s_spec.kv)
                 if per_layer_state:
                     L = cfg.n_layers
-                    sl = lambda t, i: jax.tree.map(
-                        lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype), t)
                     cold_abs = [jax.tree.map(
                         lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
                         cold_abs) for _ in range(L)]

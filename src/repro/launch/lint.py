@@ -1,0 +1,133 @@
+"""retrolint CLI — the repo's static + trace-time hot-path contract gate.
+
+    python -m repro.launch.lint                  # full gate (CI entrypoint)
+    python -m repro.launch.lint --no-trace       # static passes only (fast)
+    python -m repro.launch.lint --explain RL201  # what a rule means / how to fix
+    python -m repro.launch.lint --selftest       # every rule vs its fixtures
+    python -m repro.launch.lint --write-baseline # suppress current findings
+
+Exit status: 0 when no unsuppressed error-severity finding remains (advice
+never gates), 1 otherwise, 2 on usage errors. Suppression layers (narrowest
+wins): `# retrolint: sync(<reason>)` / `# retrolint: ignore(RLxxx: <reason>)`
+pragmas on the flagged line, then the checked-in ``lint_baseline.txt``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+from typing import Dict, List
+
+from repro.analysis import ast_rules, pallas_check
+from repro.analysis.findings import (RULES, Finding, apply_baseline,
+                                     explain_rule, load_baseline,
+                                     write_baseline)
+
+
+def _repo_root(start: str) -> str:
+    d = os.path.abspath(start)
+    while d != os.path.dirname(d):
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return d
+        d = os.path.dirname(d)
+    return os.path.abspath(start)
+
+
+def _parse_geometry(spec: str) -> Dict[str, int]:
+    geom: Dict[str, int] = {}
+    for part in filter(None, (p.strip() for p in spec.split(","))):
+        name, _, val = part.partition("=")
+        try:
+            geom[name.strip()] = int(val)
+        except ValueError:
+            raise SystemExit(f"bad --geometry entry {part!r} "
+                             f"(want name=int,name=int,...)")
+    return geom
+
+
+def main(argv: List[str] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.lint",
+        description="static + trace-time hot-path contract checks")
+    ap.add_argument("--root", default=".",
+                    help="repo root (default: auto-detect from cwd)")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print a rule's rationale and fix guidance")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run every rule against its known-good/bad fixtures")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the jaxpr/compile contract pass (no serve "
+                         "runs; AST + Pallas only)")
+    ap.add_argument("--baseline", default=None,
+                    help="suppression baseline file "
+                         "(default: <root>/lint_baseline.txt)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="rewrite the baseline to suppress current findings")
+    ap.add_argument("--geometry", default="",
+                    help="VMEM-estimate geometry overrides, name=int,... "
+                         f"(defaults: {pallas_check.GEOMETRY_DEFAULTS})")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=pallas_check.DEFAULT_VMEM_BUDGET,
+                    help="VMEM budget in bytes for RL203")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="only print findings, no progress")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        text = explain_rule(args.explain.upper())
+        if text is None:
+            print(f"unknown rule {args.explain!r}; known: "
+                  f"{', '.join(sorted(RULES))}", file=sys.stderr)
+            return 2
+        print(text)
+        return 0
+
+    log = (lambda *_: None) if args.quiet else \
+        (lambda *m: print(*m, file=sys.stderr))
+
+    if args.selftest:
+        from repro.analysis.selftest import run_selftests
+        log("retrolint: running rule self-tests")
+        fails = run_selftests()
+        for f in fails:
+            print(f"SELFTEST FAIL: {f}")
+        print(f"retrolint selftest: "
+              f"{'FAILED' if fails else 'ok'} ({len(fails)} failures)")
+        return 1 if fails else 0
+
+    root = _repo_root(args.root)
+    baseline_path = args.baseline or os.path.join(root, "lint_baseline.txt")
+    findings: List[Finding] = []
+
+    log(f"retrolint: AST pass over {root}/src")
+    findings += ast_rules.lint_tree(root)
+    log("retrolint: Pallas kernel pass")
+    findings += pallas_check.check_tree(
+        root, geometry=_parse_geometry(args.geometry),
+        vmem_budget=args.vmem_budget)
+    if not args.no_trace:
+        from repro.analysis.jaxpr_check import run_contract_checks
+        findings += run_contract_checks(verbose=log)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"baseline written: {baseline_path} "
+              f"({sum(f.severity == 'error' for f in findings)} entries)")
+        return 0
+
+    visible = apply_baseline(findings, load_baseline(baseline_path))
+    errors = [f for f in visible if f.severity == "error"]
+    advice = [f for f in visible if f.severity != "error"]
+    for f in sorted(visible, key=lambda f: (f.path, f.line, f.rule)):
+        print(f.render())
+    suppressed = len(findings) - len(visible)
+    log(f"retrolint: {len(errors)} error(s), {len(advice)} advice, "
+        f"{suppressed} baselined")
+    if errors:
+        log("retrolint: FAILED — `--explain <rule>` explains a finding; "
+            "a pragma or the baseline suppresses a sanctioned one")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -46,7 +46,6 @@ def _state_shardings(cfg, mesh, B, M, layout: str):
         return NamedSharding(mesh, P(*s))
 
     from repro.core.wave_index import WaveState
-    a = cfg.attn
     fields = {
         "k_store": (5, 2), "v_store": (5, 2), "pos_store": (4, 2),
         "centroid": (4, 2), "vsum": (4, 2), "size": (3, 2), "stored": (3, 2),

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import re
 from dataclasses import asdict, dataclass
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16

@@ -15,13 +15,12 @@ Conventions (Megatron-style tensor parallel + data parallel):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 
 
 # ---------------------------------------------------------------------------

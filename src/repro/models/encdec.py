@@ -10,7 +10,7 @@ prefill and is "steady by construction" (fixed 1500 frames).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,7 @@ different depth => different K/V).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, NamedTuple, Tuple
+from typing import Any, Dict, List, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ cleanly under pjit and stack cleanly for ``lax.scan`` over layers.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax

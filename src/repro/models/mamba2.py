@@ -8,7 +8,6 @@ A short causal depthwise conv precedes (x, B, C) as in the reference model.
 """
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 import jax

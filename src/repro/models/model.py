@@ -18,8 +18,7 @@ patch_embeds (B, P, D) for vlm; frames (B, F, D) for audio.
 """
 from __future__ import annotations
 
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ peak at O(chunk · state + T/chunk · carry), the standard recompute trade.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def remat_chunked_scan(body, carry, xs, chunk: int = 256):

@@ -9,7 +9,6 @@ Serve-time attention runtime is selectable:
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -24,7 +23,7 @@ from repro.core.wave_index import (WaveState, append_token,
                                    scatter_chunk_rows)
 from repro.core.zones import ZonePlan, plan_zones
 from repro.models import layers as L
-from repro.models.moe import init_moe, moe_apply, moe_apply_grouped
+from repro.models.moe import init_moe, moe_apply_grouped
 
 GLOBAL_WINDOW = 1.0e9   # "no sliding window" sentinel (traced-friendly)
 

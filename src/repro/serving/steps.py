@@ -7,13 +7,10 @@ Shapes are the assignment's contract:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
-import jax
-
 from repro.configs.base import InputShape, ModelConfig
-from repro.core.zones import ZonePlan, plan_zones
+from repro.core.zones import plan_zones
 from repro.models import model as M
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import make_train_step

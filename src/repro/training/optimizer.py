@@ -7,7 +7,7 @@ rules as the parameters (ZeRO-style sharding falls out of the weight specs).
 from __future__ import annotations
 
 import math
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,9 @@
 """Train-step builder + host training loop."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M

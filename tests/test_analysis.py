@@ -1,0 +1,216 @@
+"""retrolint test suite: every rule against its fixtures, suppression
+plumbing, the CLI gate on seeded-bad trees, and the serve-level contract
+regression (slow lane)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import ast_rules, pallas_check
+from repro.analysis.findings import (RULES, Finding, Pragmas, apply_baseline,
+                                     explain_rule, load_baseline,
+                                     write_baseline)
+from repro.analysis.selftest import BAD_FIXTURES, FIXTURES, run_selftests
+from repro.launch import lint as lint_cli
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+
+# ------------------------------------------------------------ rule fixtures
+@pytest.mark.parametrize("fx", FIXTURES,
+                         ids=[f"{f.rule}-{i}" for i, f in enumerate(FIXTURES)])
+def test_rule_fixture_pair(fx):
+    """Each bad fixture trips exactly its rule; its good twin stays silent."""
+    bad = [f for f in fx.checker(fx.bad) if f.rule == fx.rule]
+    assert bad, f"{fx.rule}: bad fixture not flagged"
+    good = [f for f in fx.checker(fx.good) if f.severity == "error"]
+    assert not good, f"{fx.rule}: good fixture flagged: {good[0].render()}"
+
+
+def test_selftests_static_rules_pass():
+    assert run_selftests(include_traced=False) == []
+
+
+def test_selftests_traced_rules_pass():
+    # RL101/RL102/RL103 against real traced functions (tiny jits).
+    assert run_selftests(include_traced=True) == []
+
+
+def test_every_rule_has_fixture_or_traced_selftest():
+    fixture_rules = {fx.rule for fx in FIXTURES} | {"RL101", "RL102", "RL103"}
+    # RL104 is advisory and exercised by the serve-level contract pass.
+    assert set(RULES) - fixture_rules == {"RL104"}
+
+
+# ------------------------------------------------------------------ pragmas
+def test_sync_pragma_requires_reason():
+    src = BAD_FIXTURES["RL001"].replace(
+        "# unsanctioned host sync", "# retrolint: sync()")
+    hits = [f for f in ast_rules.lint_source(src, "x.py") if f.rule == "RL001"]
+    assert hits, "reasonless sync pragma must not sanction the call"
+
+
+def test_sync_pragma_with_reason_sanctions():
+    src = BAD_FIXTURES["RL001"].replace(
+        "# unsanctioned host sync", "# retrolint: sync(test readback)")
+    assert not [f for f in ast_rules.lint_source(src, "x.py")
+                if f.rule == "RL001"]
+
+
+def test_ignore_pragma_names_the_rule():
+    src = BAD_FIXTURES["RL002"].replace(
+        "# traced-value branch", "# retrolint: ignore(RL002: trace-checked)")
+    assert not [f for f in ast_rules.lint_source(src, "x.py")
+                if f.rule == "RL002"]
+    # an ignore for a DIFFERENT rule must not suppress it
+    src = BAD_FIXTURES["RL002"].replace(
+        "# traced-value branch", "# retrolint: ignore(RL003: wrong rule)")
+    assert [f for f in ast_rules.lint_source(src, "x.py")
+            if f.rule == "RL002"]
+
+
+def test_hot_pragma_extends_hot_set():
+    src = BAD_FIXTURES["RL001"].replace("  # retrolint: hot", "")
+    assert not [f for f in ast_rules.lint_source(src, "x.py")
+                if f.rule == "RL001"], "without the hot mark, syncs are fine"
+
+
+def test_pragma_scan_multiline_call():
+    p = Pragmas.scan("x = f(  # retrolint: sync(reason)\n    y)\n")
+    assert p.sanctions_sync(1) and not p.sanctions_sync(2)
+
+
+# ----------------------------------------------------------------- baseline
+def test_baseline_roundtrip(tmp_path):
+    f1 = Finding("RL001", "src/a.py", 10, "f", "sync np.asarray")
+    f2 = Finding("RL203", "src/k.py", 3, "g", "footprint 99 bytes")
+    adv = Finding("RL104", "src/e.py", 0, "s", "arg 1 copy", severity="advice")
+    path = str(tmp_path / "baseline.txt")
+    write_baseline(path, [f1, f2, adv])
+    base = load_baseline(path)
+    assert {f1.fingerprint, f2.fingerprint} == base   # advice never baselined
+    visible = apply_baseline([f1, f2, adv], base)
+    assert visible == [adv]                           # advice passes through
+
+
+def test_fingerprint_survives_line_and_count_edits():
+    a = Finding("RL203", "src/k.py", 3, "g", "footprint 99 bytes")
+    b = Finding("RL203", "src/k.py", 77, "g", "footprint 1024 bytes")
+    assert a.fingerprint == b.fingerprint
+    c = Finding("RL203", "src/other.py", 3, "g", "footprint 99 bytes")
+    assert a.fingerprint != c.fingerprint
+
+
+def test_load_baseline_missing_file_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.txt")) == set()
+
+
+# ------------------------------------------------------------------ explain
+def test_explain_covers_every_rule():
+    for rid, rule in RULES.items():
+        text = explain_rule(rid)
+        assert text and rid in text and rule.title in text
+    assert explain_rule("RL999") is None
+
+
+def test_cli_explain_exit_codes(capsys):
+    assert lint_cli.main(["--explain", "rl001"]) == 0
+    assert "hot" in capsys.readouterr().out
+    assert lint_cli.main(["--explain", "RL999"]) == 2
+
+
+# ----------------------------------------------------------------- CLI gate
+def _seed_tree(tmp_path, files):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(src)
+    return str(tmp_path)
+
+
+def test_cli_clean_tree_exits_zero(tmp_path):
+    root = _seed_tree(tmp_path, {
+        "src/repro/__init__.py": "",
+        "src/repro/clean.py": "import jax\n\ndef f(x):\n    return x\n"})
+    assert lint_cli.main(["--root", root, "--no-trace", "-q"]) == 0
+
+
+@pytest.mark.parametrize("rule", sorted(BAD_FIXTURES))
+def test_cli_seeded_bad_fixture_trips_gate(tmp_path, rule, capsys):
+    # Pallas rules only run under src/repro/kernels; AST rules anywhere in src
+    rel = ("src/repro/kernels/bad.py" if rule.startswith("RL2")
+           else "src/repro/bad.py")
+    root = _seed_tree(tmp_path, {rel: BAD_FIXTURES[rule]})
+    assert lint_cli.main(["--root", root, "--no-trace", "-q"]) == 1
+    assert rule in capsys.readouterr().out
+
+
+def test_cli_write_baseline_then_clean(tmp_path):
+    root = _seed_tree(tmp_path, {"src/repro/bad.py": BAD_FIXTURES["RL003"]})
+    assert lint_cli.main(["--root", root, "--no-trace", "-q",
+                          "--write-baseline"]) == 0
+    # the freshly written baseline suppresses the seeded finding
+    assert lint_cli.main(["--root", root, "--no-trace", "-q"]) == 0
+
+
+def test_cli_bad_geometry_exits_two(tmp_path):
+    with pytest.raises(SystemExit):
+        lint_cli.main(["--root", str(tmp_path), "--geometry", "oops"])
+
+
+# --------------------------------------------------------- repo is the proof
+def test_repo_static_passes_are_clean():
+    """The checked-in tree is the canonical good fixture: zero static
+    errors with the checked-in (empty) baseline."""
+    findings = ast_rules.lint_tree(REPO) + pallas_check.check_tree(REPO)
+    visible = apply_baseline(
+        findings, load_baseline(os.path.join(REPO, "lint_baseline.txt")))
+    errors = [f.render() for f in visible if f.severity == "error"]
+    assert not errors, "\n".join(errors)
+
+
+def test_engine_sanctioned_syncs_are_all_annotated():
+    """Every np.asarray-style sync in the serve hot path carries a reasoned
+    pragma — the sync inventory the kernel README documents."""
+    path = os.path.join(REPO, "src", "repro", "serving", "engine.py")
+    with open(path) as f:
+        src = f.read()
+    pragmas = Pragmas.scan(src)
+    reasons = [payload for entries in pragmas.by_line.values()
+               for kind, payload in entries if kind == "sync"]
+    assert len(reasons) >= 7 and all(reasons), reasons
+
+
+def test_serve_stage_contract_shape():
+    from repro.serving.engine import SERVE_STAGES
+    assert SERVE_STAGES["rank_fn"]["donate"] == (2,)
+    assert SERVE_STAGES["offload_flush"]["donate"] == (0,)
+    assert SERVE_STAGES["cache_upd"]["donate"] == (0, 1, 2)
+    for name, contract in SERVE_STAGES.items():
+        assert contract["budget"] in ("per_geometry", "per_prompt_len",
+                                      "per_prompt_bucket"), name
+
+
+def test_selftest_cli_entrypoint():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.lint", "--selftest"],
+        capture_output=True, text=True, cwd=REPO,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src"),
+             "JAX_PLATFORMS": "cpu"})
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "ok (0 failures)" in out.stdout
+
+
+# -------------------------------------------------- serve-level regression
+@pytest.mark.slow
+def test_serve_contract_checks_hold():
+    """Trace-time gate over two real mixed serve runs: zero unsanctioned
+    callbacks, every contracted donation truly aliases (including the
+    rank_fn/offload_flush donations this contract flagged as missing), and
+    every stage compiles exactly its budget."""
+    from repro.analysis.jaxpr_check import run_contract_checks
+    findings = run_contract_checks()
+    errors = [f.render() for f in findings if f.severity == "error"]
+    assert not errors, "\n".join(errors)
+    assert not findings, [f.render() for f in findings]  # no advice either

@@ -4,7 +4,6 @@ Runs with or without ``hypothesis``: when it is installed the property tests
 explore generated inputs; on a clean environment they fall back to seeded
 numpy sweeps over the same checks, so ``pytest`` always collects cleanly.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

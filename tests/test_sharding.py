@@ -9,7 +9,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import INPUT_SHAPES
-from repro.configs.registry import ARCH_IDS, get_config, input_specs
+from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch import sharding as S
 from repro.models import model as M
 

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.sparse_prefill import block_sparse_attention
 from repro.data.pipeline import clustered_keys
@@ -75,8 +74,6 @@ def test_sparse_close_on_structured_keys():
 
 def test_prefill_integration_sparse_plus_wave_index():
     """Sparse prefill composes with the wave index (paper Sec. 5.2)."""
-    import dataclasses
-
     from repro.configs.base import AttnConfig, InputShape, ModelConfig
     from repro.configs.registry import SMOKE_RETRO, materialize_batch
     from repro.core.zones import plan_zones

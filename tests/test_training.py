@@ -1,5 +1,4 @@
 """Training substrate: optimizer properties, loss descent, checkpointing."""
-import os
 import tempfile
 
 import jax

@@ -44,7 +44,6 @@ def test_prefill_accounting():
 def test_vsum_matches_members():
     """Meta-index value sums equal the sum of member values (incl. overflow)."""
     state, k, v = _build(n=612, seed=2)
-    n = 612
     active = int(state.n_clusters[0])
     vs = np.asarray(state.vsum[0, 0][:active])
     pos = np.asarray(state.pos_store[0, 0][:active])
