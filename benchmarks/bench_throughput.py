@@ -155,6 +155,7 @@ def compare_offload(quick: bool = False) -> dict:
             "bytes_from_cache": m.bytes_from_cache,
             "bytes_from_pending": m.bytes_from_pending,
             "decode_tps": round(m.decode_tps, 1),
+            "offload_vs_direct_tps": round(m.decode_tps / m0.decode_tps, 3),
             "tokens_out": m.tokens_out,
         }
         emit(f"offload_cache_frac_{frac}",

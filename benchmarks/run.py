@@ -41,6 +41,8 @@ def main() -> None:
         fr = res["offload"]["cache_fracs"]
         assert all(v["bytes_over_link"] > 0 for v in fr.values()), \
             "offload serving recorded no link traffic"
+        assert all(v["offload_vs_direct_tps"] > 0 for v in fr.values()), \
+            "offload comparison missing the offload-vs-direct tps ratio"
         return
 
     from benchmarks import (bench_accuracy_budget, bench_cache,

@@ -194,6 +194,76 @@ budget means the kernel will spill or fail to fit at that geometry — shrink
 block_l / cluster_cap or re-tile before it reaches hardware.""")
 
 
+_rule(
+    "RL301", "staging-read-before-miss-write",
+    "Attend reads the miss staging tail before this step's staging write "
+    "landed (or the staging write consumed miss payloads not yet built).",
+    """The offload decode step stages this step's cache misses into the tail
+slots [C, C+r) of the device block cache, then attends over them. In the
+happens-before model of the recorded schedule, every ``attend_fn`` that
+reads ``cache_tail[l]`` must be preceded (device-stream order, same step)
+by the ``cache_stage``/``cache_upd`` write that staged this step's misses,
+and that dispatch must itself follow the host-side ``translate`` that built
+the miss payloads. A schedule that dispatches the attend first reads stale
+tail payloads from the PREVIOUS step — silently wrong attention that is
+bit-plausible (the tail always holds *some* well-formed cluster).""")
+
+_rule(
+    "RL302", "stale-mapping-table",
+    "Translation consulted after a slot-remapping apply_updates whose "
+    "device-cache mirror has not landed (stale ClusterMappingTable).",
+    """``apply_updates`` (the deferred-admission drain) remaps
+ClusterMappingTable entries to device-cache slots and queues the payload
+mirror; the mirror is scattered into the device cache by the NEXT step's
+``cache_upd``. A ``translate`` that runs after the drain hands out the NEW
+slot ids, so the attend consuming them must be preceded by a ``cache_upd``
+that consumed the admission queue — otherwise the kernel reads whatever the
+evicted cluster left in those slots. The checker requires, for every drain
+that wrote the admission queue, a queue-consuming ``cache_upd`` dispatch
+between the drain and the next attend on that layer.""")
+
+_rule(
+    "RL303", "mirror-overwrites-inflight-slot",
+    "A host-space write lands in a device cache buffer racing an in-flight "
+    "attend (no sync or stream edge orders them).",
+    """Device-side writes to the block cache are safe because the single
+device stream serializes them against the attends that read the same
+buffers. A write that does NOT ride the stream — a host-side scatter into
+the mirror, a transfer on a second stream — races any attend that was
+dispatched but not yet proven complete (no host sync on a later stream
+value). The model checker flags host-space writes to device buffers with an
+in-flight reader and no ordering edge. Keep mirror updates in jitted
+stages (``cache_upd``) so the stream orders them.""")
+
+_rule(
+    "RL304", "pipeline-opportunity",
+    "A host sync blocks with an idle host while independent host work "
+    "exists that could overlap it (advice).",
+    """The pipeline-opportunity detector. For every blocking readback the
+checker looks at the host-order gap between the producing dispatch and the
+sync: if the host did nothing in that gap, and a host-side op with real
+effects sits immediately before the producer with NO dependency path into
+it, that op could legally run inside the gap — the sync would then overlap
+host work instead of idling. This is the finding that motivated the
+layer-pipelined offload decode schedule: dispatch layer l+1's rank (and
+start its id readback) BEFORE draining layer l's deferred admissions, so
+the per-layer id sync overlaps the drain and the device's attend.""")
+
+_rule(
+    "RL305", "donation-reuse-across-overlap",
+    "A donated buffer is read or re-donated by a later op without being "
+    "rebound in between.",
+    """Donating a buffer to a dispatched stage invalidates the host's
+reference: once stages from different layers overlap, passing the dead
+reference to a later dispatch (or reading it from host code) observes
+clobbered memory on hardware even when the interpreter happens to keep it
+alive. In the happens-before model every donated buffer must be rebound —
+written, or passed through as an aliased output — before any later event
+reads or re-donates it. The AST rule RL004 catches the lexical version of
+this; RL305 checks the actual recorded schedule, where the reuse can span
+stages that no single function body shows.""")
+
+
 def explain_rule(rule_id: str) -> Optional[str]:
     r = RULES.get(rule_id)
     if r is None:

@@ -324,18 +324,24 @@ _BLOCKING_STAGES = ("graft", "categorical_ids", "merge_tokens", "prefill",
 def run_contract_checks(verbose=None) -> List[Finding]:
     """The full trace-time gate: a chunked+offload serve and a
     blocking+direct serve (tiny config), then every SERVE_STAGES contract
-    verified against what was recorded."""
+    verified against what was recorded. The offload run doubles as the
+    retrosched (RL301-RL305) schedule recording: a ``ScheduleRecorder``
+    captures the control-plane event stream and the happens-before checker
+    runs over it — no third serve run."""
+    from repro.analysis.schedule_check import schedule_findings
+    from repro.analysis.schedule_model import ScheduleRecorder
     from repro.serving.engine import SERVE_STAGES
     log = verbose or (lambda *_: None)
     cfg, params = _tiny_setup()
     lengths = [48, 72, 96, 72]          # ragged mix, one duplicate length
 
     log("retrolint: serve run 1/2 (chunked admission, host-offload decode)")
-    run_a = _serve_run(
-        "chunked+offload", cfg, params, lengths=lengths, max_new=40,
-        exercised=_OFFLOAD_STAGES, n_prompt_lens=len(set(lengths)),
-        n_buckets=len(set(lengths)),
-        admission="chunked", offload=True, temperature=0.0)
+    with ScheduleRecorder() as sched:
+        run_a = _serve_run(
+            "chunked+offload", cfg, params, lengths=lengths, max_new=40,
+            exercised=_OFFLOAD_STAGES, n_prompt_lens=len(set(lengths)),
+            n_buckets=len(set(lengths)),
+            admission="chunked", offload=True, temperature=0.0)
     log("retrolint: serve run 2/2 (blocking admission, direct decode)")
     run_b = _serve_run(
         "blocking+direct", cfg, params, lengths=lengths, max_new=40,
@@ -344,6 +350,9 @@ def run_contract_checks(verbose=None) -> List[Finding]:
         admission="blocking", offload=False, temperature=0.7)
 
     findings: List[Finding] = []
+    log("retrolint: retrosched happens-before check over the offload "
+        "schedule")
+    findings += schedule_findings(sched.trace)
     checked: set = set()
     for run in (run_a, run_b):
         # RL103: per-stage compile budget over the run

@@ -299,6 +299,103 @@ def _selftest_rl103() -> List[str]:
     return []
 
 
+# ---------------------------------------------- retrosched (RL3xx) fixtures
+# Schedule fixtures are op sequences resolved through the REAL SERVE_STAGES
+# effects declarations (schedule_model.build_trace), so each selftest
+# exercises exactly the model the live engine trace is held to. Ops outside
+# the table (a rogue host mirror, a donation with no rebind) inject raw
+# effects via the extras channel.
+def _sched_check(schedule, rule: str, expect: bool, label: str) -> List[str]:
+    from repro.analysis.schedule_check import check_trace
+    from repro.analysis.schedule_model import build_trace
+    hits = [f for f in check_trace(build_trace(schedule, 2))
+            if f.rule == rule]
+    if expect and not hits:
+        return [f"{rule}: {label} schedule not flagged"]
+    if not expect and hits:
+        return [f"{rule}: {label} schedule falsely flagged: "
+                f"{hits[0].render()}"]
+    return []
+
+
+def _selftest_rl301() -> List[str]:
+    from repro.analysis.schedule_check import reference_schedule
+    # attend dispatched BEFORE the staging write: move each layer's
+    # cache-stage dispatch to just after its attend
+    bad: List[tuple] = []
+    held = None
+    for ev in reference_schedule():
+        if ev[2] in ("cache_stage", "cache_upd"):
+            held = ev
+            continue
+        bad.append(ev)
+        if ev[2] == "attend_fn" and held is not None:
+            bad.append(held)
+            held = None
+    fails = _sched_check(bad, "RL301", True, "attend-before-staging-write")
+    fails += _sched_check(reference_schedule(), "RL301", False,
+                          "pipelined reference")
+    return fails
+
+
+def _selftest_rl302() -> List[str]:
+    from repro.analysis.schedule_check import reference_schedule
+    # admissions queued by the drain but the next step stages with
+    # cache_stage — the mapping table got remapped without its mirror edge
+    fails = _sched_check(reference_schedule(drop_mirror=True), "RL302",
+                         True, "mirror-dropping")
+    fails += _sched_check(reference_schedule(), "RL302", False,
+                          "pipelined reference")
+    return fails
+
+
+def _selftest_rl303() -> List[str]:
+    from repro.analysis.schedule_check import reference_schedule
+    mirror = {"effects": {"writes": ("cache_body[l]",)}}
+    logits_sync = {"effects": {"reads": ("logits",)}}
+
+    def with_host_mirror(synced: bool):
+        # the mirror targets layer 1: layer 0's attend is already proven
+        # complete by layer 1's id sync, so only the last attend is in flight
+        sched = list(reference_schedule(steps=1))
+        tail = [(0, 1, "host_mirror", "host", mirror)]
+        if synced:       # sync on the logits first: attend proven complete
+            tail.insert(0, (0, -1, "sample_sync", "sync", logits_sync))
+        return sched + tail
+
+    fails = _sched_check(with_host_mirror(False), "RL303", True,
+                         "unsynced host mirror")
+    fails += _sched_check(with_host_mirror(True), "RL303", False,
+                          "synced host mirror")
+    return fails
+
+
+def _selftest_rl304() -> List[str]:
+    from repro.analysis.schedule_check import reference_schedule
+    # the pre-pipeline engine order: drain(l) runs BEFORE rank(l+1) is
+    # dispatched, so the id sync idles behind independent host work
+    fails = _sched_check(reference_schedule(pipelined=False), "RL304",
+                         True, "unpipelined")
+    fails += _sched_check(reference_schedule(), "RL304", False,
+                          "pipelined reference")
+    return fails
+
+
+def _selftest_rl305() -> List[str]:
+    from repro.analysis.schedule_check import reference_schedule
+    # rank donates the live tree but (unlike the real stage) does not return
+    # a rebound copy — the later attend reads clobbered memory
+    leaky = {"effects": {"reads": ("hidden", "live[l]"),
+                         "writes": ("ctx[l]", "ids[l]"),
+                         "donates": ("live[l]",)}}
+    bad = [ev if ev[2] != "rank_fn" else ev[:4] + (leaky,)
+           for ev in reference_schedule(steps=1)]
+    fails = _sched_check(bad, "RL305", True, "donation-without-rebind")
+    fails += _sched_check(reference_schedule(), "RL305", False,
+                          "pipelined reference")
+    return fails
+
+
 def run_selftests(include_traced: bool = True) -> List[str]:
     """Run every fixture; return failure descriptions (empty = all pass)."""
     fails: List[str] = []
@@ -312,6 +409,11 @@ def run_selftests(include_traced: bool = True) -> List[str]:
             fails.append(
                 f"{fx.rule} (fixture {i}): good snippet flagged: "
                 f"{good_hits[0].render()}")
+    fails += _selftest_rl301()
+    fails += _selftest_rl302()
+    fails += _selftest_rl303()
+    fails += _selftest_rl304()
+    fails += _selftest_rl305()
     if include_traced:
         fails += _selftest_rl101()
         fails += _selftest_rl102()

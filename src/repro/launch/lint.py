@@ -5,6 +5,8 @@
     python -m repro.launch.lint --explain RL201  # what a rule means / how to fix
     python -m repro.launch.lint --selftest       # every rule vs its fixtures
     python -m repro.launch.lint --write-baseline # suppress current findings
+    python -m repro.launch.lint --json           # machine-readable findings
+    python -m repro.launch.lint --github         # ::error workflow commands
 
 Exit status: 0 when no unsuppressed error-severity finding remains (advice
 never gates), 1 otherwise, 2 on usage errors. Suppression layers (narrowest
@@ -14,6 +16,7 @@ pragmas on the flagged line, then the checked-in ``lint_baseline.txt``.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 from typing import Dict, List
@@ -41,8 +44,26 @@ def _parse_geometry(spec: str) -> Dict[str, int]:
             geom[name.strip()] = int(val)
         except ValueError:
             raise SystemExit(f"bad --geometry entry {part!r} "
-                             f"(want name=int,name=int,...)")
+                             f"(want name=int,name=int,...)") from None
     return geom
+
+
+def _finding_json(f: Finding) -> Dict:
+    return {"rule": f.rule, "path": f.path, "line": f.line,
+            "qualname": f.qualname, "message": f.message,
+            "severity": f.severity, "fingerprint": f.fingerprint}
+
+
+def _github_annotation(f: Finding) -> str:
+    """One GitHub Actions workflow command per finding — surfaced inline on
+    the PR diff by the runner. Newlines/percent must be URL-escaped per the
+    workflow-command spec."""
+    level = "error" if f.severity == "error" else "notice"
+    msg = (f"({f.qualname}) {f.message}"
+           .replace("%", "%25").replace("\r", "%0D").replace("\n", "%0A"))
+    title = f"retrolint {f.rule}"
+    return (f"::{level} file={f.path},line={max(f.line, 1)},"
+            f"title={title}::{msg}")
 
 
 def main(argv: List[str] = None) -> int:
@@ -69,6 +90,12 @@ def main(argv: List[str] = None) -> int:
     ap.add_argument("--vmem-budget", type=int,
                     default=pallas_check.DEFAULT_VMEM_BUDGET,
                     help="VMEM budget in bytes for RL203")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as a JSON object on stdout instead "
+                         "of the human listing")
+    ap.add_argument("--github", action="store_true",
+                    help="additionally emit GitHub Actions ::error/::notice "
+                         "workflow commands (inline PR annotations)")
     ap.add_argument("-q", "--quiet", action="store_true",
                     help="only print findings, no progress")
     args = ap.parse_args(argv)
@@ -89,6 +116,10 @@ def main(argv: List[str] = None) -> int:
         from repro.analysis.selftest import run_selftests
         log("retrolint: running rule self-tests")
         fails = run_selftests()
+        if args.as_json:
+            print(json.dumps({"selftest_failures": fails,
+                              "ok": not fails}, indent=2))
+            return 1 if fails else 0
         for f in fails:
             print(f"SELFTEST FAIL: {f}")
         print(f"retrolint selftest: "
@@ -118,9 +149,19 @@ def main(argv: List[str] = None) -> int:
     visible = apply_baseline(findings, load_baseline(baseline_path))
     errors = [f for f in visible if f.severity == "error"]
     advice = [f for f in visible if f.severity != "error"]
-    for f in sorted(visible, key=lambda f: (f.path, f.line, f.rule)):
-        print(f.render())
+    ordered = sorted(visible, key=lambda f: (f.path, f.line, f.rule))
     suppressed = len(findings) - len(visible)
+    if args.as_json:
+        print(json.dumps({
+            "findings": [_finding_json(f) for f in ordered],
+            "errors": len(errors), "advice": len(advice),
+            "baselined": suppressed, "ok": not errors}, indent=2))
+    else:
+        for f in ordered:
+            print(f.render())
+    if args.github:
+        for f in ordered:
+            print(_github_annotation(f))
     log(f"retrolint: {len(errors)} error(s), {len(advice)} advice, "
         f"{suppressed} baselined")
     if errors:

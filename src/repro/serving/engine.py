@@ -174,35 +174,144 @@ WaveMetrics = ServeMetrics
 #                          (blocking admission only)
 # Adding a jitted stage to the engine without registering it here fails the
 # lint gate, which is the point: the contract is the reviewable artifact.
+#
+# PR 7 (retrosched) extends every entry with its EFFECTS — the abstract
+# buffers the stage reads / writes / donates / passes (donated-and-carried:
+# the output aliases the input unchanged) — and the memory ``space`` it runs
+# in. Buffer names come from ``analysis.schedule_model.BUFFER_SPACE``;
+# ``[l]`` means the event's layer instance, ``[*]`` every layer. Host
+# control-plane ops of the offload decode step (``space="host"``,
+# ``budget="host"``: not jitted, so no compile budget or donation lowering
+# applies) are registered in the same table so the whole schedule contract
+# is one reviewable artifact; the happens-before checker (RL301-RL305)
+# resolves recorded schedule events against these declarations. How to
+# declare effects for a new stage: src/repro/analysis/README.md.
 # ---------------------------------------------------------------------------
 SERVE_STAGES: Dict[str, Dict[str, Any]] = {
     # engine-lifetime jits (built in __init__)
-    "graft":           dict(donate=(0,), budget="per_geometry"),
-    "argmax_ids":      dict(donate=(), budget="per_geometry"),
-    "categorical_ids": dict(donate=(), budget="per_geometry"),
-    "merge_tokens":    dict(donate=(), budget="per_geometry"),
+    "graft":           dict(donate=(0,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("serve_state", "slot_state"),
+                                         writes=("serve_state",),
+                                         donates=("serve_state",))),
+    "argmax_ids":      dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("logits",),
+                                         writes=("tokens",))),
+    "categorical_ids": dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("logits",),
+                                         writes=("tokens",))),
+    "merge_tokens":    dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("tokens",),
+                                         writes=("tokens",))),
     # admission
-    "prefill":         dict(donate=(), budget="per_prompt_bucket"),
-    "chunk":           dict(donate=(1,), budget="per_geometry"),
-    "chunk_pe":        dict(donate=(1,), budget="per_geometry"),
+    "prefill":         dict(donate=(), budget="per_prompt_bucket",
+                            space="device",
+                            effects=dict(reads=("prompt",),
+                                         writes=("slot_state",))),
+    "chunk":           dict(donate=(1,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("prompt", "chunk_state"),
+                                         writes=("chunk_state",),
+                                         donates=("chunk_state",))),
+    "chunk_pe":        dict(donate=(1,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("prompt", "chunk_state"),
+                                         writes=("chunk_state",),
+                                         donates=("chunk_state",))),
     # fin's chunk state (arg 1) stays un-donated on purpose: finalize
     # TRANSFORMS the staged tail (clustering) rather than updating it in
     # place, so most leaves cannot alias an output and a donation would
     # silently degrade to copies (RL102 would rightly fail); copy_ok
     # records the exemption for the RL104 missed-donation advice
     "fin":             dict(donate=(0,), budget="per_prompt_len",
-                            copy_ok=(1,)),
+                            copy_ok=(1,), space="device",
+                            effects=dict(reads=("serve_state",
+                                                "chunk_state"),
+                                         writes=("serve_state",
+                                                 "slot_state"),
+                                         donates=("serve_state",))),
     # direct-store decode
-    "decode":          dict(donate=(1,), budget="per_geometry"),
-    "flush":           dict(donate=(0,), budget="per_geometry"),
-    # host-offload decode plane
-    "embed_tokens":    dict(donate=(), budget="per_geometry"),
-    "rank_fn":         dict(donate=(2,), budget="per_geometry"),
-    "attend_fn":       dict(donate=(), budget="per_geometry"),
-    "unembed_logits":  dict(donate=(), budget="per_geometry"),
-    "cache_upd":       dict(donate=(0, 1, 2), budget="per_geometry"),
-    "cache_stage":     dict(donate=(0, 1, 2), budget="per_geometry"),
-    "offload_flush":   dict(donate=(0,), budget="per_geometry"),
+    "decode":          dict(donate=(1,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("tokens", "serve_state"),
+                                         writes=("logits", "serve_state"),
+                                         donates=("serve_state",))),
+    "flush":           dict(donate=(0,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("serve_state",),
+                                         writes=("serve_state",),
+                                         donates=("serve_state",))),
+    # host-offload decode plane (device stream)
+    "embed_tokens":    dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("tokens",),
+                                         writes=("hidden",))),
+    "rank_fn":         dict(donate=(2,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("hidden", "live[l]"),
+                                         writes=("ctx[l]", "ids[l]",
+                                                 "live[l]"),
+                                         donates=("live[l]",))),
+    "attend_fn":       dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("hidden", "ctx[l]",
+                                                "live[l]", "cache_body[l]",
+                                                "cache_tail[l]", "slots[l]"),
+                                         writes=("hidden",))),
+    "unembed_logits":  dict(donate=(), budget="per_geometry", space="device",
+                            effects=dict(reads=("hidden",),
+                                         writes=("logits",))),
+    "cache_upd":       dict(donate=(0, 1, 2), budget="per_geometry",
+                            space="device",
+                            # the staging tail is overwritten wholesale (all
+                            # r slots restaged every step), so it is not a
+                            # data read; the body IS (scatter preserves
+                            # un-admitted slots)
+                            effects=dict(reads=("cache_body[l]",
+                                                "adm_queue[l]", "miss[l]"),
+                                         writes=("cache_body[l]",
+                                                 "cache_tail[l]"),
+                                         donates=("cache_body[l]",
+                                                  "cache_tail[l]"))),
+    # cache_stage donates the whole cache array but only WRITES the staging
+    # tail — the body rides through as an aliased output (``passes``), which
+    # is what keeps RL305 from treating the body as clobbered
+    "cache_stage":     dict(donate=(0, 1, 2), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("miss[l]",),
+                                         writes=("cache_tail[l]",),
+                                         donates=("cache_body[l]",
+                                                  "cache_tail[l]"),
+                                         passes=("cache_body[l]",))),
+    "offload_flush":   dict(donate=(0,), budget="per_geometry",
+                            space="device",
+                            effects=dict(reads=("live[*]",),
+                                         writes=("live[*]", "flush_blocks"),
+                                         donates=("live[*]",))),
+    # host control plane of the offload decode step (not jitted; traced as
+    # schedule events via _OffloadPlane.trace)
+    "readback_start":  dict(donate=(), budget="host", space="host",
+                            effects=dict(reads=("ids[l]",))),
+    "readback_ids":    dict(donate=(), budget="host", space="host",
+                            effects=dict(reads=("ids[l]",),
+                                         writes=("ids_host[l]",))),
+    "translate":       dict(donate=(), budget="host", space="host",
+                            effects=dict(reads=("ids_host[l]", "cmt[l]",
+                                                "host_store[l]",
+                                                "pending[l]"),
+                                         writes=("slots[l]", "miss[l]",
+                                                 "pending[l]", "cmt[l]"))),
+    "drain_admissions": dict(donate=(), budget="host", space="host",
+                             effects=dict(reads=("pending[l]",
+                                                 "host_store[l]"),
+                                          writes=("cmt[l]", "pending[l]",
+                                                  "adm_queue[l]"))),
+    "readback_flush":  dict(donate=(), budget="host", space="host",
+                            effects=dict(reads=("flush_blocks",))),
+    "host_flush":      dict(donate=(), budget="host", space="host",
+                            effects=dict(writes=("host_store[*]",))),
+    "admit_slot":      dict(donate=(), budget="host", space="host",
+                            effects=dict(writes=("host_store[*]", "cmt[*]",
+                                                 "pending[*]",
+                                                 "adm_queue[*]"))),
 }
 
 
@@ -233,7 +342,25 @@ class _OffloadPlane:
       this step's staged misses) -> attend (jit, slot-indirected paged
       kernel) -> ``apply_updates`` (host, OFF the hot path; admissions mirror
       into the device cache at the NEXT step's cache update).
+
+    The loop is LAYER-PIPELINED (retrosched's RL304 report, PR 7): right
+    after layer l's attend is dispatched, layer l+1's rank is dispatched and
+    its id readback STARTED (``copy_to_host_async``); only then does layer
+    l's deferred-admission drain run on the host. Layer l+1's blocking id
+    sync therefore overlaps the drain and the device's cache-update + attend
+    + rank work instead of idling behind them. Every dispatch / host op /
+    sync calls ``trace`` (a no-op hooked by
+    ``analysis.schedule_model.ScheduleRecorder``), and the recorded schedule
+    is model-checked against the SERVE_STAGES effects declarations by
+    RL301-RL305 in CI — the pipeline ships as a checked refactor, not a
+    leap of faith.
     """
+
+    def trace(self, op: str, layer: int, kind: str, step: int,
+              **extras) -> None:
+        """Schedule-event hook, one call per dispatch / host op / sync in
+        program order. A no-op in production; ``ScheduleRecorder`` patches
+        it at class level to record the happens-before event stream."""
 
     def __init__(self, engine: "ServeEngine", B: int, max_ctx: int):
         cfg = engine.cfg
@@ -263,6 +390,7 @@ class _OffloadPlane:
             [None] * self.L
         self.ncl = np.zeros(B, np.int64)    # host mirror of n_clusters
         self.retired = BufferStats()        # stats of replaced slot caches
+        self._step = -1                     # schedule epoch for trace events
         (self._embed, self._rank, self._attend, self._unembed,
          self._cache_upd, self._cache_stage, self._flush) = \
             engine._offload_fns(B, max_ctx, self.C, self.r)
@@ -293,6 +421,8 @@ class _OffloadPlane:
         transfer of slot ``i``'s payload blocks, fresh mapping tables (the
         previous occupant's cache entries die with it; its stats are retired
         into the engine aggregate)."""
+        self._step += 1
+        self.trace("admit_slot", -1, "host", self._step)
         # sanctioned syncs: the admission-time device->host store transfer IS
         # the offload (one per admitted request, amortized over its decode)
         k_all = np.asarray(  # retrolint: sync(admission store offload)
@@ -362,11 +492,12 @@ class _OffloadPlane:
                     miss_p[b, h, miss_j] = mp
         return idx_slots, miss_k, miss_v, miss_p
 
-    def _drain_admissions(self, l, active) -> None:  # retrolint: hot
+    def _drain_admissions(self, l, active) -> bool:  # retrolint: hot
         """Apply deferred WaveBuffer admissions (off the attend hot path) and
         queue their device-cache mirror for the next step's cache update.
         A warm-cache step with zero admissions queues None — the next cache
-        update then skips the mirror transfer + scatter entirely."""
+        update then skips the mirror transfer + scatter entirely. Returns
+        whether anything was queued (the RL302 mirror-edge trace bit)."""
         B, H, r = self.B, self.H, self.r
         queued = None
         for b in range(B):
@@ -392,41 +523,72 @@ class _OffloadPlane:
                     ap[b, h, n:n + m] = pp
                     n += m
         self.pending_adm[l] = queued
+        return queued is not None
 
     # ------------------------------------------------------------- decode
+    def _launch_rank(self, l, kv, x, act_dev, t):   # retrolint: hot
+        """Dispatch layer ``l``'s rank and START its retrieved-id readback
+        (``copy_to_host_async`` — non-blocking; the transfer overlaps
+        whatever the host and device do next). The matching blocking sync
+        happens at this layer's loop iteration in ``decode_step``."""
+        live = {f: getattr(kv, f)[l] for f in LIVE_FIELDS}
+        self.trace("rank_fn", l, "dispatch", t)
+        ctx, idx_r, live = self._rank(self._layers[l], self._windows[l],
+                                      live, x, act_dev)
+        self.trace("readback_start", l, "host", t)
+        idx_r.copy_to_host_async()
+        return ctx, idx_r, live
+
     def decode_step(self, state, tokens_dev, active):  # retrolint: hot
-        """One decode step over the slot batch, layer by layer with the
-        control plane interleaved. Returns (device logits, new state)."""
+        """One decode step over the slot batch, layer-pipelined: layer l+1's
+        rank is dispatched and its id readback started BEFORE layer l's
+        deferred-admission drain runs, so the per-layer id sync overlaps the
+        drain and the device's cache-update/attend/rank work (see the class
+        docstring; retrosched certifies the order). Returns (device logits,
+        new state)."""
+        self._step += 1
+        t = self._step
+        self.trace("embed_tokens", -1, "dispatch", t)
         x = self._embed(self.params, tokens_dev)
         act_dev = jnp.asarray(active)
         kv = state.kv
         new_hot: List[Dict[str, jax.Array]] = []
+        nxt = self._launch_rank(0, kv, x, act_dev, t)
         for l in range(self.L):
-            live = {f: getattr(kv, f)[l] for f in LIVE_FIELDS}
-            ctx, idx_r, live = self._rank(self._layers[l], self._windows[l],
-                                          live, x, act_dev)
+            ctx, idx_r, live = nxt
             # the paper's CPU control plane: translating retrieved cluster
-            # ids through the cache mapping tables needs them on host
+            # ids through the cache mapping tables needs them on host. The
+            # readback was started asynchronously at dispatch time, so this
+            # waits only for the transfer remainder.
+            self.trace("readback_ids", l, "sync", t)
             ids = np.asarray(idx_r)  # retrolint: sync(per-layer id readback)
+            self.trace("translate", l, "host", t)
             idx_slots, mk, mv, mp = self._translate(l, ids, active)
             if self.pending_adm[l] is None:     # warm cache: staging only
+                self.trace("cache_stage", l, "dispatch", t)
                 self.cache_k[l], self.cache_v[l], self.cache_p[l] = \
                     self._cache_stage(self.cache_k[l], self.cache_v[l],
                                       self.cache_p[l], jnp.asarray(mk),
                                       jnp.asarray(mv), jnp.asarray(mp))
             else:
                 adm_slots, adm_k, adm_v, adm_p = self.pending_adm[l]
+                self.trace("cache_upd", l, "dispatch", t)
                 self.cache_k[l], self.cache_v[l], self.cache_p[l] = \
                     self._cache_upd(self.cache_k[l], self.cache_v[l],
                                     self.cache_p[l], jnp.asarray(adm_slots),
                                     jnp.asarray(adm_k), jnp.asarray(adm_v),
                                     jnp.asarray(adm_p), jnp.asarray(mk),
                                     jnp.asarray(mv), jnp.asarray(mp))
+            self.trace("attend_fn", l, "dispatch", t)
             x = self._attend(self._layers[l], self._windows[l], live, x, ctx,
                              self.cache_k[l], self.cache_v[l],
                              self.cache_p[l], jnp.asarray(idx_slots))
-            self._drain_admissions(l, active)   # deferred, off the hot path
             new_hot.append(live)
+            if l + 1 < self.L:      # pipeline: next rank before this drain
+                nxt = self._launch_rank(l + 1, kv, x, act_dev, t)
+            queued = self._drain_admissions(l, active)  # off the hot path
+            self.trace("drain_admissions", l, "host", t, queued=queued)
+        self.trace("unembed_logits", -1, "dispatch", t)
         logits = self._unembed(self.params, x)
         kv = kv._replace(**{f: jnp.stack([h[f] for h in new_hot])
                             for f in HOT_FIELDS})
@@ -436,14 +598,18 @@ class _OffloadPlane:
     def flush(self, state, rows):               # retrolint: hot
         """Decode-time index update: meta entries on device, payload blocks
         appended to the host stores at each flushed row's cluster offset."""
+        self._step += 1                 # own schedule epoch (between steps)
         kv = state.kv
         live = {f: getattr(kv, f) for f in LIVE_FIELDS}
+        self.trace("offload_flush", -1, "dispatch", self._step)
         new_live, res = self._flush(live, jnp.asarray(rows))
         # sanctioned syncs: flushed payload blocks append to the HOST stores,
         # once per update_segment decoded tokens, not per step
+        self.trace("readback_flush", -1, "sync", self._step)
         rk = np.asarray(res.k_store)  # retrolint: sync(flush block readback)
         rv = np.asarray(res.v_store)  # retrolint: sync(flush block readback)
         rp = np.asarray(res.pos_store)  # retrolint: sync(flush block readback)
+        self.trace("host_flush", -1, "host", self._step)
         k_new = rk.shape[3]
         for b in np.where(rows)[0]:
             off = int(self.ncl[b])

@@ -39,6 +39,9 @@ def test_selftests_traced_rules_pass():
 
 def test_every_rule_has_fixture_or_traced_selftest():
     fixture_rules = {fx.rule for fx in FIXTURES} | {"RL101", "RL102", "RL103"}
+    # RL301-RL305 are exercised by the schedule-fixture selftests
+    # (selftest._selftest_rl30x, always-on in run_selftests).
+    fixture_rules |= {"RL301", "RL302", "RL303", "RL304", "RL305"}
     # RL104 is advisory and exercised by the serve-level contract pass.
     assert set(RULES) - fixture_rules == {"RL104"}
 
@@ -189,7 +192,76 @@ def test_serve_stage_contract_shape():
     assert SERVE_STAGES["cache_upd"]["donate"] == (0, 1, 2)
     for name, contract in SERVE_STAGES.items():
         assert contract["budget"] in ("per_geometry", "per_prompt_len",
-                                      "per_prompt_bucket"), name
+                                      "per_prompt_bucket", "host"), name
+        # retrosched contract: every stage declares its buffer effects
+        eff = contract["effects"]
+        assert set(eff) <= {"reads", "writes", "donates", "passes"}, name
+        for slot in eff.values():
+            assert isinstance(slot, tuple), name
+        # host control-plane steps never run on the stream
+        if contract["budget"] == "host":
+            assert contract["space"] == "host", name
+
+
+# ------------------------------------------------------------- retrosched
+def test_schedule_pipelined_reference_is_clean():
+    from repro.analysis.schedule_check import (check_trace,
+                                               reference_schedule)
+    from repro.analysis.schedule_model import build_trace
+    tr = build_trace(reference_schedule(pipelined=True), n_layers=2)
+    assert check_trace(tr) == []
+    warm = build_trace(reference_schedule(pipelined=True, warm=True),
+                       n_layers=2)
+    assert check_trace(warm) == []
+
+
+def test_schedule_prepipeline_order_advises_rl304():
+    from repro.analysis.schedule_check import (check_trace,
+                                               reference_schedule)
+    from repro.analysis.schedule_model import build_trace
+    tr = build_trace(reference_schedule(pipelined=False), n_layers=2)
+    found = check_trace(tr)
+    assert [f.rule for f in found] == ["RL304"]
+    assert found[0].severity == "advice"       # never gates
+
+
+def test_schedule_dropped_mirror_errors_rl302():
+    from repro.analysis.schedule_check import (check_trace,
+                                               reference_schedule)
+    from repro.analysis.schedule_model import build_trace
+    tr = build_trace(reference_schedule(drop_mirror=True), n_layers=2)
+    assert "RL302" in {f.rule for f in check_trace(tr)}
+
+
+def test_schedule_empty_trace_is_an_error():
+    from repro.analysis.schedule_check import schedule_findings
+    found = schedule_findings(None)
+    assert len(found) == 1 and found[0].rule == "RL301"
+    assert found[0].severity == "error"
+
+
+def test_cli_json_output(tmp_path, capsys):
+    import json as _json
+    root = _seed_tree(tmp_path, {
+        "src/repro/__init__.py": "",
+        "src/repro/bad.py": BAD_FIXTURES["RL003"]})
+    assert lint_cli.main(["--root", root, "--no-trace", "-q",
+                          "--json"]) == 1
+    doc = _json.loads(capsys.readouterr().out)
+    assert doc["errors"] >= 1 and doc["ok"] is False
+    f = doc["findings"][0]
+    assert {"rule", "path", "line", "qualname", "message", "severity",
+            "fingerprint"} <= set(f)
+
+
+def test_cli_github_annotations(tmp_path, capsys):
+    root = _seed_tree(tmp_path, {
+        "src/repro/__init__.py": "",
+        "src/repro/bad.py": BAD_FIXTURES["RL003"]})
+    assert lint_cli.main(["--root", root, "--no-trace", "-q",
+                          "--github"]) == 1
+    out = capsys.readouterr().out
+    assert "::error file=" in out and "title=retrolint RL003" in out
 
 
 def test_selftest_cli_entrypoint():

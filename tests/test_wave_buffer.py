@@ -241,3 +241,70 @@ def test_transfer_accounting():
     buf.assemble(np.array([0, 1]))
     assert buf.stats.bytes_over_link == 2 * per
     assert buf.stats.bytes_from_cache == 2 * per
+
+
+# --------------------------------------------------- pending-map lifecycle
+def test_pending_map_cleared_by_apply_updates():
+    """apply_updates closes the update window: the pending set AND the
+    repeat-miss dedup map are both drained, so the next window starts from
+    the table alone."""
+    buf, host = _mk(n_clusters=16, cache=4)
+    buf.translate(np.array([3, 5]))
+    assert set(buf._pending_map) == {3, 5}
+    buf.apply_updates()
+    assert buf._pending_map == {} and buf._pending == []
+    # a hit in the new window must not repopulate the pending machinery
+    buf.translate(np.array([3]))
+    assert buf._pending_map == {} and buf.stats.pending_hits == 0
+
+
+def test_repeat_miss_after_window_refetches_under_eviction():
+    """An id admitted in window 1 then evicted must be re-fetched over the
+    link when it misses in window 2 — served from the host store, never from
+    a stale pending payload of the previous window."""
+    buf, host = _mk(n_clusters=16, cache=2, policy="lru")
+    per = buf.bytes_per_cluster
+    buf.translate(np.array([0, 1]))
+    buf.apply_updates()                       # window 1: 0,1 admitted
+    buf.translate(np.array([2, 3]))
+    buf.apply_updates()                       # window 2: 0,1 evicted (LRU)
+    assert buf.table.cache_slot[0] == -1
+    host[0] += 1000.0                         # host store moves on
+    link_before = buf.stats.bytes_over_link
+    slot, hit, payload = buf.translate(np.array([0]))
+    assert not hit[0]
+    np.testing.assert_array_equal(payload[0], host[0])   # fresh, not stale
+    assert buf.stats.bytes_over_link == link_before + per  # real re-fetch
+    assert buf.stats.pending_hits == 0        # not served from a dead window
+
+
+def test_pending_hits_scoped_to_window():
+    """Repeat misses dedup over the link only within one update window; the
+    same id missing across two windows pays the link twice."""
+    buf, host = _mk(n_clusters=16, cache=0)   # passthrough: never admitted
+    per = buf.bytes_per_cluster
+    buf.translate(np.array([7]))
+    buf.translate(np.array([7]))              # same window: pending hit
+    assert buf.stats.bytes_over_link == per
+    assert buf.stats.pending_hits == 1
+    buf.apply_updates()
+    buf.translate(np.array([7]))              # new window: fetch again
+    assert buf.stats.bytes_over_link == 2 * per
+    assert buf.stats.pending_hits == 1
+
+
+def test_byte_counters_consistent_across_windows():
+    """Every looked-up cluster is served from exactly one source — link,
+    pending set, or device cache — so the three byte counters partition the
+    total traffic across any multi-window access sequence."""
+    rng = np.random.default_rng(0)
+    buf, host = _mk(n_clusters=32, cache=4, policy="lru")
+    for step in range(20):
+        ids = rng.integers(0, 32, size=rng.integers(1, 6))
+        out = buf.assemble(ids)
+        np.testing.assert_array_equal(out, host[ids])     # always correct
+        if step % 3 == 2:
+            buf.apply_updates()
+    total = (buf.stats.bytes_over_link + buf.stats.bytes_from_pending
+             + buf.stats.bytes_from_cache)
+    assert total == buf.stats.lookups * buf.bytes_per_cluster
