@@ -173,6 +173,66 @@ def run_offload():
     compare_offload(quick=False)
 
 
+def compare_degradation(quick: bool = False) -> dict:
+    """retrofault degradation trajectory: offload serving under a seeded
+    transient-fault schedule at rates {0, 0.05, 0.2} with no retries and a
+    tight fetch deadline, so failed fetches degrade (masked out of the
+    retrieval zone, covered by the estimation zone) instead of stalling.
+    Records decode tps and the degraded-step fraction per rate; at rate 0
+    the outputs must equal the fault-free run token-for-token."""
+    cfg, params, prompts, news = _ragged_setup(quick, retrieval_frac=0.3)
+    if quick:       # offload decode syncs per layer: trim the quick queue
+        prompts, news = prompts[:3], news[:3]
+
+    def serve(profile):
+        from repro.serving.engine import Request, ServeEngine
+        eng = ServeEngine(cfg, params, runtime="retro", gen_headroom=256,
+                          max_context=768, admission="chunked",
+                          prefill_chunk=64, offload=True, cache_frac=0.2,
+                          fault_profile=profile, fetch_retries=0,
+                          fetch_deadline_s=0.01)
+        reqs = [Request(prompt=p.copy(), max_new_tokens=n)
+                for p, n in zip(prompts, news)]
+        m = eng.serve(reqs, batch_size=2)
+        return m, [r.out_tokens for r in reqs]
+
+    ref_m, ref = serve(None)          # fault-free offload baseline
+    result = {"scenario": "ragged_continuous_degradation", "slots": 2,
+              "requests": len(prompts),
+              "baseline": {"decode_tps": round(ref_m.decode_tps, 1),
+                           "tokens_out": ref_m.tokens_out},
+              "fault_rates": {}}
+    for rate in (0.0, 0.05, 0.2):
+        m, outs = serve(f"transient={rate},spike={rate},seed=17")
+        degraded_frac = m.degraded_steps / max(m.steps, 1)
+        result["fault_rates"][str(rate)] = {
+            "decode_tps": round(m.decode_tps, 1),
+            "degraded_steps": m.degraded_steps,
+            "degraded_step_frac": round(degraded_frac, 4),
+            "dropped_cluster_steps": m.dropped_cluster_steps,
+            "faults": m.cache_faults,
+            "failed_fetches": m.cache_failed_fetches,
+            "tokens_out": m.tokens_out,
+            "outputs_equal_baseline": outs == ref,
+        }
+        emit(f"degradation_fault_rate_{rate}",
+             m.decode_s / max(m.tokens_out, 1) * 1e6,
+             f"degraded_frac={degraded_frac:.3f};"
+             f"faults={m.cache_faults};"
+             f"failed={m.cache_failed_fetches}")
+    result["outputs_equal"] = \
+        result["fault_rates"]["0.0"]["outputs_equal_baseline"]
+    result["completes_under_faults"] = all(
+        v["tokens_out"] == ref_m.tokens_out
+        for v in result["fault_rates"].values())
+    return result
+
+
+def run_degradation():
+    """retrofault degradation trajectory (CSV flavor)."""
+    compare_degradation(quick=False)
+
+
 def compare_attn_impl(quick: bool = False) -> dict:
     """jnp vs fused (gather-free paged kernel) decode attention.
 

@@ -2,11 +2,13 @@
 #
 # ``--quick`` runs the continuous-serving smoke comparison (chunked vs
 # blocking admission on the same ragged queue), the jnp-vs-fused decode
-# attention comparison (per-step latency p50/p99 + cost_analysis bytes), and
-# the host-offload serving comparison (serve-level wave-buffer hit ratio /
-# link traffic at several cache fractions, outputs vs the direct store) and
-# writes them to a ``BENCH_throughput.json`` artifact so the perf trajectory
-# is recorded per PR.
+# attention comparison (per-step latency p50/p99 + cost_analysis bytes), the
+# host-offload serving comparison (serve-level wave-buffer hit ratio /
+# link traffic at several cache fractions, outputs vs the direct store), and
+# the retrofault degradation trajectory (decode tps + degraded-step fraction
+# under seeded fault schedules at rates {0, 0.05, 0.2}) and writes them to a
+# ``BENCH_throughput.json`` artifact so the perf trajectory is recorded per
+# PR.
 from __future__ import annotations
 
 import json
@@ -24,6 +26,7 @@ def main() -> None:
         res = bench_throughput.compare_admission(quick=True)
         res["attn_impl"] = bench_throughput.compare_attn_impl(quick=True)
         res["offload"] = bench_throughput.compare_offload(quick=True)
+        res["degradation"] = bench_throughput.compare_degradation(quick=True)
         with open("BENCH_throughput.json", "w") as f:
             json.dump(res, f, indent=2)
             f.write("\n")
@@ -43,6 +46,15 @@ def main() -> None:
             "offload serving recorded no link traffic"
         assert all(v["offload_vs_direct_tps"] > 0 for v in fr.values()), \
             "offload comparison missing the offload-vs-direct tps ratio"
+        assert res["degradation"]["outputs_equal"], \
+            "zero-rate fault schedule changed outputs vs fault-free offload"
+        assert res["degradation"]["completes_under_faults"], \
+            "a faulted serve run dropped tokens (request did not complete)"
+        dr = res["degradation"]["fault_rates"]
+        assert dr["0.0"]["degraded_steps"] == 0, \
+            "zero-rate fault schedule recorded degraded steps"
+        assert all(v["decode_tps"] > 0 for v in dr.values()), \
+            "degradation comparison missing decode tps"
         return
 
     from benchmarks import (bench_accuracy_budget, bench_cache,
@@ -57,6 +69,7 @@ def main() -> None:
         ("attn_impl_jnp_vs_fused", bench_throughput.run_attn_impl),
         ("fig16_wave_buffer", bench_cache.run),
         ("fig16_serve_offload", bench_throughput.run_offload),
+        ("retrofault_degradation", bench_throughput.run_degradation),
         ("fig15_prefill_overhead", bench_prefill.run),
         ("fig17b_long_generation", bench_longgen.run),
         ("fig10_niah_trained_model", bench_niah.run),

@@ -47,8 +47,10 @@ BUFFER_SPACE: Dict[str, str] = {
     # host
     "ids_host": "host", "cmt": "host", "host_store": "host",
     "pending": "host", "adm_queue": "host",
-    # host-built, consumed by a dispatch at issuance
-    "slots": "link", "miss": "link",
+    # host-built, consumed by a dispatch at issuance ("valid" is the
+    # per-cluster fetch-validity mask of the degraded decode path: built by
+    # translate, read by the same step's attend — RL301 certifies the order)
+    "slots": "link", "miss": "link", "valid": "link",
 }
 
 # Host control-plane ops of the offload decode step. These are not jitted

@@ -114,6 +114,37 @@ def _estimation_zone(state: WaveState, cs, idx_r, idx_e, *,
     return est_logit, cs_e, vs_e
 
 
+def _retrieval_cover(state: WaveState, cs, idx_r):
+    """Estimation-zone COVER for the retrieved clusters (degraded decode).
+
+    For each retrieved cluster, the Jensen estimate of its STORED tokens:
+    ``cov_logit = cs + log(stored_eff)``, ``cov_vs = vsum * stored_frac``
+    (the overflow fraction is excluded — the unconditional overflow entry of
+    :func:`_estimation_zone` already covers it, so cover + overflow together
+    equal the full-cluster estimate with no double count). The attend path
+    enables a cluster's cover entry only when its validity mask is 0 — a
+    fetch that missed its deadline loses exact attention for the step but
+    keeps its estimated attention mass (paper Eq. 2-4 accuracy bound).
+
+    Touches only the META index, like the rest of the rank half. Dead or
+    empty clusters get ``cov_logit = NEG`` exactly (inert in every merge
+    impl). Returns ``(cov_logit (B,H,G,r), cs_r (B,H,G,r), cov_vs
+    (B,H,r,hd))``.
+    """
+    cs_r = jnp.take_along_axis(cs, idx_r[:, :, None, :], axis=3)   # (B,H,G,r)
+    sz_r = jnp.take_along_axis(state.size, idx_r, axis=2)          # (B,H,r)
+    st_r = jnp.take_along_axis(state.stored, idx_r, axis=2)
+    vs_r = jnp.take_along_axis(state.vsum, idx_r[..., None], axis=2)
+    over = jnp.maximum(sz_r - st_r, 0).astype(jnp.float32)         # (B,H,r)
+    st_eff = sz_r.astype(jnp.float32) - over                       # stored part
+    frac = st_eff / jnp.maximum(sz_r.astype(jnp.float32), 1.0)
+    log_st = jnp.where(st_eff > 0, jnp.log(jnp.maximum(st_eff, 1.0)), NEG)
+    cov_logit = jnp.where(st_eff[:, :, None, :] > 0,
+                          cs_r + log_st[:, :, None, :], NEG)
+    cov_vs = vs_r * frac[..., None]
+    return cov_logit, cs_r, cov_vs
+
+
 ATTN_IMPLS = ("jnp", "fused", "pallas")
 
 
@@ -137,7 +168,7 @@ def _local_positions(state: WaveState):
 
 
 def _fused_wave_attention(qg, state: WaveState, idx_r, est_logit, cs_e, vs_e,
-                          *, window, softcap, kv_src=None):
+                          *, window, softcap, kv_src=None, valid=None):
     """Gather-free decode merge: hand the raw zones to the paged Pallas
     kernel (``kernels.wave_attention``), which walks sink -> local buffer ->
     the r retrieved clusters IN PLACE via scalar-prefetched ids and folds the
@@ -177,7 +208,11 @@ def _fused_wave_attention(qg, state: WaveState, idx_r, est_logit, cs_e, vs_e,
         live = jnp.zeros((B, Hkv, 1), jnp.int32)
     else:
         idx_k = idx_r
-        live = jnp.ones((B, Hkv, r), jnp.int32)
+        # degraded decode: the per-cluster validity mask rides the kernel's
+        # existing ``live`` operand — an invalid (fetch-failed) cluster is
+        # skipped by the paged walk exactly like a dead padding slot.
+        live = (valid.astype(jnp.int32) if valid is not None
+                else jnp.ones((B, Hkv, r), jnp.int32))
 
     return wa_ops.paged_wave_attention(
         qg, state.sink_k, state.sink_v, state.local_k, state.local_v,
@@ -231,7 +266,8 @@ def wave_decode_rank(qg, state: WaveState, retro: RetroConfig, plan: ZonePlan,
                      *, window: Optional[jax.Array] = None,
                      softcap: Optional[float] = None,
                      use_estimation: bool = True,
-                     overflow_correction: bool = True, cluster_offset=0):
+                     overflow_correction: bool = True, cluster_offset=0,
+                     with_cover: bool = False):
     """Control-plane half of the decode step: rank clusters and build the
     estimation-zone inputs. Touches only the META index (centroids, value
     sums, sizes) and per-row counters — never the cluster payload stores —
@@ -239,13 +275,20 @@ def wave_decode_rank(qg, state: WaveState, retro: RetroConfig, plan: ZonePlan,
     translate ``idx_r`` through its ``ClusterMappingTable``, and hand cache
     slots to :func:`wave_attention_attend`.
 
-    qg: (B, Hkv, G, hd). Returns (idx_r, est_logit, cs_e, vs_e)."""
+    qg: (B, Hkv, G, hd). Returns (idx_r, est_logit, cs_e, vs_e); with
+    ``with_cover`` additionally the :func:`_retrieval_cover` triple the
+    attend half needs to estimation-cover fetch-failed clusters (degraded
+    decode) — computed here because the attend half of the offload path has
+    no access to the meta index."""
     cs, idx_re = rank_clusters(qg, state, plan, window, softcap,
                                cluster_offset)
     idx_r, idx_e = idx_re[:, :, :plan.r], idx_re[:, :, plan.r:]
     est_logit, cs_e, vs_e = _estimation_zone(
         state, cs, idx_r, idx_e, use_estimation=use_estimation,
         overflow_correction=overflow_correction)
+    if with_cover:
+        cover = _retrieval_cover(state, cs, idx_r)
+        return idx_r, est_logit, cs_e, vs_e, cover
     return idx_r, est_logit, cs_e, vs_e
 
 
@@ -253,7 +296,8 @@ def wave_attention_attend(q, state: WaveState, retro: RetroConfig,
                           plan: ZonePlan, idx, est_logit, cs_e, vs_e, *,
                           kv_src=None, window: Optional[jax.Array] = None,
                           softcap: Optional[float] = None, impl: str = "jnp",
-                          include_steady=True, return_parts: bool = False):
+                          include_steady=True, return_parts: bool = False,
+                          valid=None, cover=None):
     """Data-plane half of the decode step: exact attention over the steady
     zone plus the ``idx``-addressed blocks of ``kv_src``, merged with the
     estimation zone.
@@ -264,7 +308,15 @@ def wave_attention_attend(q, state: WaveState, retro: RetroConfig,
     host-offload configuration: ``idx`` then holds device-cache slots
     (cache hits + per-step miss staging slots) translated on the control
     plane, not cluster ids. Block payloads are identical bits either way, so
-    cache placement is accuracy-agnostic."""
+    cache placement is accuracy-agnostic.
+
+    ``valid``: optional (B, Hkv, r) per-cluster validity mask (degraded
+    decode): a 0 cluster is masked OUT of the retrieval zone — its blocks
+    never fetched in time — and, when ``cover`` (the
+    :func:`_retrieval_cover` triple from ``wave_decode_rank(...,
+    with_cover=True)``) is given, its attention mass re-enters through the
+    estimation zone. With an all-ones mask the cover entries are NEG/zero
+    gated and the result is bit-identical to ``valid=None``."""
     B, Hq, hd = q.shape
     Hkv = state.centroid.shape[1]
     G = Hq // Hkv
@@ -273,13 +325,26 @@ def wave_attention_attend(q, state: WaveState, retro: RetroConfig,
     qg = q.reshape(B, Hkv, G, hd)
     impl = resolve_attn_impl(impl)
 
+    # ---- degraded decode: estimation-cover the masked-out clusters ---------
+    # A valid cluster's cover entry is gated to (NEG logit, zero vsum): it
+    # contributes exactly 0.0 to num/den and cannot move the softmax max, so
+    # all-valid steps are bit-identical with or without the cover concat.
+    if valid is not None and cover is not None and r > 0:
+        v_ok = valid > 0                                   # (B, Hkv, r)
+        cov_logit, cov_cs, cov_vs = cover
+        cov_logit = jnp.where(v_ok[:, :, None, :], NEG, cov_logit)
+        cov_vs = jnp.where(v_ok[..., None], 0.0, cov_vs)
+        est_logit = jnp.concatenate([est_logit, cov_logit], axis=3)
+        cs_e = jnp.concatenate([cs_e, cov_cs], axis=3)
+        vs_e = jnp.concatenate([vs_e, cov_vs], axis=2)
+
     # ---- gather-free paged kernel: zones handed over unconcatenated --------
     # (the sharded return_parts merge keeps the reference path: partial
     # (num, den, m) are what shards LSE-combine, see core.distributed)
     if impl == "fused" and not return_parts and include_steady is True:
         out = _fused_wave_attention(qg, state, idx, est_logit, cs_e, vs_e,
                                     window=window, softcap=softcap,
-                                    kv_src=kv_src)
+                                    kv_src=kv_src, valid=valid)
         return WaveAttnOut(out.reshape(B, Hq, hd).astype(q.dtype), idx)
 
     # ---- execution buffer: steady zone + retrieved blocks ------------------
@@ -310,6 +375,11 @@ def wave_attention_attend(q, state: WaveState, retro: RetroConfig,
     ok = (p_exec >= 0) & (p_exec <= qp)
     if window is not None:
         ok = ok & (p_exec > qp - window)
+    if valid is not None and r > 0:        # degraded decode: mask failed
+        ret_ok = jnp.repeat(valid > 0, cap, axis=2)        # (B,Hkv,r·cap)
+        n_steady = p_exec.shape[2] - r * cap
+        ok = ok & jnp.concatenate(
+            [jnp.ones((B, Hkv, n_steady), bool), ret_ok], axis=2)
     if include_steady is not True:                 # traced gate (sharding)
         n_steady = retro.sink + lbuf
         is_steady = jnp.arange(p_exec.shape[2]) < n_steady

@@ -14,13 +14,127 @@ the single-host serving driver and the cache benchmarks. Mirroring the paper:
 
 The control plane is NumPy (the paper runs it on CPU threads); the data plane
 arrays live wherever the caller puts them (device or host).
+
+Fault model (retrofault)
+------------------------
+The miss-fetch path goes through a pluggable :class:`LinkTransport`. The
+production transport is an infallible zero-copy read of the host store; the
+seed-deterministic :class:`FaultyTransport` injects scheduled transient fetch
+failures, latency spikes, and payload corruption for chaos testing. Integrity
+and liveness are layered on top of the transport, not inside it:
+
+* **Checksums** — one ``zlib.crc32`` per packed ``[K | V | pos]`` payload row,
+  computed when the row is stored (buffer construction and
+  :meth:`store_rows`, which the serve engine's segment flush uses) and
+  verified on every transport fetch. A mismatch counts as
+  ``corrupt_fetches`` and is treated like a transient fault (retried).
+* **Bounded retry + exponential backoff** — a failed attempt costs
+  ``backoff_s * 2**attempt`` on a *virtual* clock (no real sleeps, so fault
+  schedules are deterministic and tests are fast); at most ``max_retries``
+  retries per miss.
+* **Deadline** — ``translate`` takes an optional virtual time budget shared
+  by all misses of the call (the engine's per-step fetch deadline). A miss
+  whose retries exhaust or whose budget runs out FAILS for this step: it is
+  reported via the ``ok`` mask, stays out of the pending set, and is
+  naturally refetched in a later update window (reconciliation). The caller
+  masks the cluster out of the retrieval zone and covers its attention mass
+  with the estimation zone.
+* **Unrecoverable faults** — :class:`FatalTransportError` propagates to the
+  caller (the serve engine finishes the affected request with
+  ``status="error"``; other slots keep serving).
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+class TransientFault(RuntimeError):
+    """A fetch attempt failed recoverably (retry may succeed)."""
+
+
+class FatalTransportError(RuntimeError):
+    """The link is unrecoverably broken for this fetch (no retry)."""
+
+
+@dataclass
+class FaultProfile:
+    """Seed-deterministic fault schedule for :class:`FaultyTransport`.
+
+    Rates are per-attempt probabilities; ``seed`` fixes the schedule. The
+    virtual latencies (``latency_s``, ``spike_s``) are charged against the
+    translate call's deadline budget — never slept.
+    """
+    transient: float = 0.0      # P(attempt raises TransientFault)
+    corrupt: float = 0.0        # P(payload corrupted in flight — crc catches)
+    spike: float = 0.0          # P(latency spike on a successful attempt)
+    fatal: float = 0.0          # P(attempt raises FatalTransportError)
+    latency_s: float = 0.0      # base virtual latency per successful fetch
+    spike_s: float = 0.05       # extra virtual latency of a spike
+    seed: int = 0
+
+    @classmethod
+    def parse(cls, spec: str) -> "FaultProfile":
+        """Parse ``"transient=0.2,corrupt=0.01,seed=3"``-style CLI specs."""
+        kw: Dict[str, float] = {}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            key, _, val = part.partition("=")
+            if key not in cls.__dataclass_fields__:
+                raise ValueError(
+                    f"unknown fault-profile field {key!r} (known: "
+                    f"{', '.join(cls.__dataclass_fields__)})")
+            kw[key] = int(val) if key == "seed" else float(val)
+        return cls(**kw)
+
+
+class LinkTransport:
+    """Pluggable host->device link for the miss-fetch path.
+
+    ``fetch(store, cid)`` returns ``(payload_row, virtual_latency_s)``. The
+    production transport is an infallible zero-copy view of the host store
+    with zero virtual latency — byte-identical to the pre-transport code.
+    """
+
+    def fetch(self, store: np.ndarray, cid: int
+              ) -> Tuple[np.ndarray, float]:
+        return store[cid], 0.0
+
+
+class FaultyTransport(LinkTransport):
+    """Seed-deterministic fault injection over the link.
+
+    Corruption happens on a COPY of the payload row (the host store is never
+    damaged — this models a bit flip in flight, which the per-row crc32
+    catches on arrival).
+    """
+
+    def __init__(self, profile: FaultProfile):
+        self.profile = profile
+        self.rng = np.random.default_rng(profile.seed)
+
+    def fetch(self, store: np.ndarray, cid: int
+              ) -> Tuple[np.ndarray, float]:
+        p = self.profile
+        if p.fatal and self.rng.random() < p.fatal:
+            raise FatalTransportError(
+                f"unrecoverable link failure fetching cluster {cid}")
+        if p.transient and self.rng.random() < p.transient:
+            raise TransientFault(f"transient fetch failure, cluster {cid}")
+        lat = p.latency_s
+        if p.spike and self.rng.random() < p.spike:
+            lat += p.spike_s
+        payload = store[cid]
+        if p.corrupt and self.rng.random() < p.corrupt:
+            payload = payload.copy()
+            flat = payload.reshape(-1)
+            flat[int(self.rng.integers(flat.size))] += 1.0
+        return payload, lat
 
 
 @dataclass
@@ -34,6 +148,10 @@ class BufferStats:
     bytes_steady: int = 0
     updates_deferred: int = 0
     pending_hits: int = 0           # repeat misses served from the pending set
+    faults: int = 0                 # transient fetch failures observed
+    retries: int = 0                # retry attempts issued (with backoff)
+    corrupt_fetches: int = 0        # crc32 mismatches caught on fetch
+    failed_fetches: int = 0         # misses abandoned (retries/deadline out)
 
     @property
     def hit_ratio(self) -> float:
@@ -51,7 +169,8 @@ class BufferStats:
         """Accumulate another buffer's counters (engine-level aggregation)."""
         for f in ("lookups", "hits", "misses", "bytes_from_cache",
                   "bytes_over_link", "bytes_from_pending", "bytes_steady",
-                  "updates_deferred", "pending_hits"):
+                  "updates_deferred", "pending_hits", "faults", "retries",
+                  "corrupt_fetches", "failed_fetches"):
             setattr(self, f, getattr(self, f) + getattr(other, f))
 
 
@@ -82,7 +201,9 @@ class WaveBuffer:
     """
 
     def __init__(self, kv_host: np.ndarray, cache_clusters: int,
-                 blocks_per_cluster: int = 1, policy: str = "lru"):
+                 blocks_per_cluster: int = 1, policy: str = "lru",
+                 transport: Optional[LinkTransport] = None,
+                 max_retries: int = 2, backoff_s: float = 1e-3):
         assert policy in ("lru", "fifo", "clock")
         if cache_clusters < 0:
             raise ValueError(f"cache_clusters must be >= 0, got {cache_clusters}")
@@ -106,19 +227,76 @@ class WaveBuffer:
         self._pending: List[Tuple[np.ndarray, np.ndarray]] = []
         self._pending_map: Dict[int, np.ndarray] = {}   # id -> fetched payload
         self.bytes_per_cluster = int(kv_host[0].nbytes) if n else 0
+        self.transport = transport if transport is not None else LinkTransport()
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.checksums = np.array(
+            [zlib.crc32(kv_host[i].tobytes()) for i in range(n)],
+            dtype=np.uint64)
+
+    # ------------------------------------------------------------------- store
+    def store_rows(self, start: int, rows: np.ndarray) -> None:
+        """Write packed payload rows ``[start, start+len)`` into the host
+        store and refresh their checksums (the serve engine's segment flush
+        MUST come through here — a raw ``kv_host[...] = ...`` slice write
+        would leave stale crcs and every later fetch of those clusters would
+        count as corrupt)."""
+        self.kv_host[start:start + len(rows)] = rows
+        for i in range(start, start + len(rows)):
+            self.checksums[i] = zlib.crc32(self.kv_host[i].tobytes())
+
+    # ------------------------------------------------------------------- fetch
+    def _fetch(self, cid: int, budget: Optional[float]
+               ) -> Tuple[Optional[np.ndarray], float]:
+        """One miss fetch through the transport, with crc verification,
+        bounded retry + exponential virtual backoff, and a virtual deadline
+        budget. Returns ``(payload_or_None, virtual_seconds_spent)``.
+        ``FatalTransportError`` propagates (the caller fails the request)."""
+        spent = 0.0
+        for attempt in range(self.max_retries + 1):
+            if attempt:
+                self.stats.retries += 1
+                spent += self.backoff_s * (2 ** (attempt - 1))
+            if budget is not None and spent > budget:
+                return None, spent              # overdue before issuing
+            try:
+                payload, lat = self.transport.fetch(self.kv_host, cid)
+            except TransientFault:
+                self.stats.faults += 1
+                continue
+            spent += lat
+            if budget is not None and spent > budget:
+                return None, spent              # arrived past the deadline
+            if zlib.crc32(payload.tobytes()) != int(self.checksums[cid]):
+                self.stats.corrupt_fetches += 1
+                continue
+            return payload, spent
+        return None, spent
 
     # ------------------------------------------------------------------ access
-    def translate(self, cluster_ids: np.ndarray
-                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def translate(self, cluster_ids: np.ndarray, deadline_s: Optional[float] = None
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Control-plane access for one decode step (synchronous).
 
-        Returns ``(slot, hit, miss_payload)``: per-id device-cache slot
-        (>= 0 for hits, -1 for misses), the hit mask, and the host payload of
+        Returns ``(slot, hit, miss_payload, ok)``: per-id device-cache slot
+        (>= 0 for hits, -1 for misses), the hit mask, the host payload of
         every MISS row (hit rows are zero — the serve engine reads hits from
-        the device cache store and only ships misses over the link). Records
+        the device cache store and only ships misses over the link), and the
+        per-id fetch-success mask. ``ok`` is False for a miss whose fetch
+        exhausted its retries or the ``deadline_s`` virtual budget (shared
+        across all misses of this call); such a miss stays OUT of the pending
+        set — its payload row is zero, the caller must mask the cluster out
+        of this step's attend, and a later window refetches it. Records
         hit/miss/pending traffic; cache *insertion* stays deferred.
         """
         cluster_ids = np.asarray(cluster_ids, dtype=np.int64)
+        n = self.kv_host.shape[0]
+        if len(cluster_ids):
+            bad = (cluster_ids < 0) | (cluster_ids >= n)
+            if bad.any():
+                raise ValueError(
+                    f"cluster_ids out of range for a store of {n} clusters: "
+                    f"{np.unique(cluster_ids[bad])[:8].tolist()}")
         slot, _ = self.table.lookup(cluster_ids)
         hit = slot >= 0
         self.tick += 1
@@ -132,17 +310,25 @@ class WaveBuffer:
 
         miss_payload = np.zeros((len(cluster_ids),) + self.kv_host.shape[1:],
                                 dtype=self.kv_host.dtype)
+        ok = np.ones(len(cluster_ids), dtype=bool)
         # A cluster missed again before the deferred update lands is served
         # from the pending set: one link transfer per cluster per update
         # window, not one per lookup (previously double-fetched AND
         # double-counted in bytes_over_link).
         if (~hit).any():
             fresh_ids: List[int] = []
+            elapsed = 0.0                       # virtual clock, per call
             for pos in np.where(~hit)[0]:
                 cid = int(cluster_ids[pos])
                 block = self._pending_map.get(cid)
                 if block is None:
-                    block = self.kv_host[cid]
+                    budget = None if deadline_s is None else deadline_s - elapsed
+                    block, spent = self._fetch(cid, budget)
+                    elapsed += spent
+                    if block is None:           # failed: stays out of the
+                        ok[pos] = False         # pending set -> refetched in
+                        self.stats.failed_fetches += 1   # a later window
+                        continue
                     self._pending_map[cid] = block
                     fresh_ids.append(cid)
                     self.stats.bytes_over_link += self.bytes_per_cluster
@@ -156,7 +342,7 @@ class WaveBuffer:
                     np.asarray(fresh_ids, dtype=np.int64),
                     np.stack([self._pending_map[c] for c in fresh_ids])))
                 self.stats.updates_deferred += 1
-        return slot, hit, miss_payload
+        return slot, hit, miss_payload, ok
 
     def assemble(self, cluster_ids: np.ndarray,
                  steady_payload: Optional[np.ndarray] = None) -> np.ndarray:
@@ -165,7 +351,7 @@ class WaveBuffer:
         Returns the concatenated payloads [steady | retrieved clusters] and
         records hit/miss traffic. Cache *insertion* is deferred (async update).
         """
-        slot, hit, payload = self.translate(cluster_ids)
+        slot, hit, payload, _ = self.translate(cluster_ids)
         if hit.any():
             payload[hit] = self.cache[slot[hit]]
         if steady_payload is not None:

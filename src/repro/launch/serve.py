@@ -62,6 +62,24 @@ def main():
     ap.add_argument("--cache-policy", default=None,
                     choices=["lru", "fifo", "clock"],
                     help="block-cache replacement policy (offload mode)")
+    ap.add_argument("--fault-profile", default=None,
+                    help="retrofault: inject link faults into the offload "
+                         "miss-fetch path, e.g. "
+                         "'transient=0.2,corrupt=0.01,spike=0.1,seed=3' "
+                         "(seed-deterministic; rates are per-attempt "
+                         "probabilities). Failed fetches are masked out of "
+                         "the retrieval zone and covered by the estimation "
+                         "zone (degraded decode)")
+    ap.add_argument("--fetch-deadline", type=float, default=None,
+                    help="per-translate-call virtual fetch budget in "
+                         "seconds; overdue misses degrade instead of "
+                         "stalling the step")
+    ap.add_argument("--fetch-retries", type=int, default=2,
+                    help="bounded retries per miss fetch (exponential "
+                         "virtual backoff)")
+    ap.add_argument("--max-decode-steps", type=int, default=None,
+                    help="per-request watchdog: finish a request with "
+                         "status='timeout' after this many decode steps")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -74,7 +92,11 @@ def main():
                          prefill_bucket=args.prefill_bucket,
                          attn_impl=args.attn_impl, offload=args.offload,
                          cache_frac=args.cache_frac,
-                         cache_policy=args.cache_policy)
+                         cache_policy=args.cache_policy,
+                         fault_profile=args.fault_profile,
+                         fetch_deadline_s=args.fetch_deadline,
+                         fetch_retries=args.fetch_retries,
+                         max_decode_steps=args.max_decode_steps)
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, lens[i % len(lens)])
                     .astype(np.int32),
@@ -95,9 +117,18 @@ def main():
               f"{m.cache_pending_hits} pending hits), "
               f"link {m.bytes_over_link / 2**20:.1f} MiB, "
               f"cache {m.bytes_from_cache / 2**20:.1f} MiB")
+        if args.fault_profile or m.cache_faults or m.degraded_steps:
+            print(f"  retrofault: {m.cache_faults} faults, "
+                  f"{m.cache_retries} retries, "
+                  f"{m.cache_corrupt_fetches} corrupt, "
+                  f"{m.cache_failed_fetches} failed fetches; "
+                  f"{m.degraded_steps}/{m.steps} degraded steps "
+                  f"({m.dropped_cluster_steps} cluster-steps dropped)")
     for i, r in enumerate(reqs):
+        status = "" if r.status == "ok" else f" [{r.status}]"
         print(f"  req {i}: prompt {len(r.prompt)}, out {len(r.out_tokens)}, "
-              f"ttft {r.ttft_s:.2f}s, decode {r.decode_tps:.1f} tok/s")
+              f"ttft {r.ttft_s:.2f}s, decode {r.decode_tps:.1f} tok/s"
+              f"{status}")
     print("sample output tokens:", reqs[0].out_tokens[:10])
 
 

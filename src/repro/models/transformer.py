@@ -571,27 +571,34 @@ def offload_decode_rank(lp, window, cfg: ModelConfig, live: Dict, x, *,
     lstate = append_token(lstate, k, v, active=active)
     G = a.n_heads // a.n_kv_heads
     qg = q.reshape(B, a.n_kv_heads, G, a.head_dim)
-    idx_r, est_logit, cs_e, vs_e = wa.wave_decode_rank(
-        qg, lstate, retro, plan, window=window, softcap=a.softcap)
-    ctx = (q, est_logit, cs_e, vs_e)
+    idx_r, est_logit, cs_e, vs_e, cover = wa.wave_decode_rank(
+        qg, lstate, retro, plan, window=window, softcap=a.softcap,
+        with_cover=True)
+    ctx = (q, est_logit, cs_e, vs_e, cover)
     return ctx, idx_r, {f: getattr(lstate, f) for f in LIVE_FIELDS}
 
 
 def offload_decode_attend(lp, window, cfg: ModelConfig, live: Dict, x, ctx,
-                          cache_k, cache_v, cache_pos, idx_slots, *,
+                          cache_k, cache_v, cache_pos, idx_slots, valid, *,
                           plan: ZonePlan, attn_impl: Optional[str] = None):
     """Data-plane half: attention over the steady zone + the slot-addressed
     blocks of the device cache (hits) / miss staging tail (misses), then
-    output projection + FFN. Returns the next hidden state."""
+    output projection + FFN. Returns the next hidden state.
+
+    ``valid``: (B, Hkv, r) int32 per-cluster validity mask from the control
+    plane's translate — 0 marks a cluster whose fetch failed its deadline
+    this step; it is masked out of the retrieval zone and covered by the
+    estimation zone via ``ctx``'s cover triple (degraded decode). All-ones
+    is bit-identical to the pre-fault path."""
     a, retro = cfg.attn, cfg.retro
     impl = wa.resolve_attn_impl(attn_impl or retro.attn_impl)
     B = x.shape[0]
     lstate = live_wave_state(live)
-    q, est_logit, cs_e, vs_e = ctx
+    q, est_logit, cs_e, vs_e, cover = ctx
     out = wa.wave_attention_attend(
         q, lstate, retro, plan, idx_slots, est_logit, cs_e, vs_e,
         kv_src=(cache_k, cache_v, cache_pos), window=window,
-        softcap=a.softcap, impl=impl).out
+        softcap=a.softcap, impl=impl, valid=valid, cover=cover).out
     x = x + out.reshape(B, -1) @ lp["attn"]["wo"]
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
     y, _ = _ffn(lp, h, cfg)

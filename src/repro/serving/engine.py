@@ -58,7 +58,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.wave_buffer import BufferStats, WaveBuffer
+from repro.core.wave_buffer import (BufferStats, FatalTransportError,
+                                    FaultProfile, FaultyTransport,
+                                    LinkTransport, WaveBuffer)
 from repro.core.wave_index import local_buffer_size
 from repro.core.zones import plan_zones
 from repro.models import model as M
@@ -76,6 +78,10 @@ class Request:
     # ---- filled by the engine ----
     ttft_s: float = 0.0                 # enqueue -> first token
     decode_tps: float = 0.0             # this request's decode tokens/s
+    # "ok" | "timeout" (max-decode-steps watchdog) | "error" (unrecoverable
+    # transport fault) — structured per-request completion status; non-ok
+    # requests still free their slot and the scheduler keeps serving
+    status: str = "ok"
 
 
 @dataclass
@@ -97,6 +103,11 @@ class ServeMetrics:
     # the engine runs with offload=True) — aggregated over every per-row
     # block cache, including caches retired when their slot was re-admitted
     cache: "BufferStats" = field(default_factory=BufferStats)
+    # degraded decode (retrofault): steps whose attend ran with >= 1 cluster
+    # masked out of the retrieval zone (fetch failed its deadline/retries,
+    # mass covered by the estimation zone), and the cluster·step drop count
+    degraded_steps: int = 0
+    dropped_cluster_steps: int = 0
 
     @property
     def decode_tps(self) -> float:
@@ -126,6 +137,23 @@ class ServeMetrics:
     @property
     def bytes_from_pending(self) -> int:
         return self.cache.bytes_from_pending
+
+    # -- fault/retry aggregates (retrofault; zero on a clean link)
+    @property
+    def cache_faults(self) -> int:
+        return self.cache.faults
+
+    @property
+    def cache_retries(self) -> int:
+        return self.cache.retries
+
+    @property
+    def cache_corrupt_fetches(self) -> int:
+        return self.cache.corrupt_fetches
+
+    @property
+    def cache_failed_fetches(self) -> int:
+        return self.cache.failed_fetches
 
     @property
     def cache_hit_ratio(self) -> float:
@@ -254,7 +282,8 @@ SERVE_STAGES: Dict[str, Dict[str, Any]] = {
     "attend_fn":       dict(donate=(), budget="per_geometry", space="device",
                             effects=dict(reads=("hidden", "ctx[l]",
                                                 "live[l]", "cache_body[l]",
-                                                "cache_tail[l]", "slots[l]"),
+                                                "cache_tail[l]", "slots[l]",
+                                                "valid[l]"),
                                          writes=("hidden",))),
     "unembed_logits":  dict(donate=(), budget="per_geometry", space="device",
                             effects=dict(reads=("hidden",),
@@ -293,12 +322,17 @@ SERVE_STAGES: Dict[str, Dict[str, Any]] = {
     "readback_ids":    dict(donate=(), budget="host", space="host",
                             effects=dict(reads=("ids[l]",),
                                          writes=("ids_host[l]",))),
+    # translate additionally builds the per-cluster validity mask (valid[l],
+    # link space): 0 marks a miss whose fetch failed its retry/deadline
+    # budget this step — attend masks it out of the retrieval zone and the
+    # estimation zone covers its mass (degraded decode, retrofault)
     "translate":       dict(donate=(), budget="host", space="host",
                             effects=dict(reads=("ids_host[l]", "cmt[l]",
                                                 "host_store[l]",
                                                 "pending[l]"),
                                          writes=("slots[l]", "miss[l]",
-                                                 "pending[l]", "cmt[l]"))),
+                                                 "valid[l]", "pending[l]",
+                                                 "cmt[l]"))),
     "drain_admissions": dict(donate=(), budget="host", space="host",
                              effects=dict(reads=("pending[l]",
                                                  "host_store[l]"),
@@ -391,6 +425,18 @@ class _OffloadPlane:
         self.ncl = np.zeros(B, np.int64)    # host mirror of n_clusters
         self.retired = BufferStats()        # stats of replaced slot caches
         self._step = -1                     # schedule epoch for trace events
+        # retrofault: ONE transport per plane, shared by every per-row wave
+        # buffer — the control plane is single-threaded, so a seeded
+        # FaultyTransport yields one reproducible fault schedule per serve
+        self.transport = (FaultyTransport(engine.fault_profile)
+                          if engine.fault_profile is not None
+                          else LinkTransport())
+        self.fetch_retries = engine.fetch_retries
+        self.fetch_backoff_s = engine.fetch_backoff_s
+        self.fetch_deadline_s = engine.fetch_deadline_s
+        self.degraded_steps = 0             # steps with >= 1 masked cluster
+        self.dropped_cluster_steps = 0      # cluster·step masked count
+        self.failed_slots: Dict[int, str] = {}   # slot -> fatal fault message
         (self._embed, self._rank, self._attend, self._unembed,
          self._cache_upd, self._cache_stage, self._flush) = \
             engine._offload_fns(B, max_ctx, self.C, self.r)
@@ -441,7 +487,10 @@ class _OffloadPlane:
                     self.retired.merge(buf.stats)
             self.bufs[l][i] = [
                 WaveBuffer(self._pack(k_all[l, h], v_all[l, h], p_all[l, h]),
-                           cache_clusters=self.C, policy=self.policy)
+                           cache_clusters=self.C, policy=self.policy,
+                           transport=self.transport,
+                           max_retries=self.fetch_retries,
+                           backoff_s=self.fetch_backoff_s)
                 for h in range(self.H)]
             # drop pending admissions aimed at the replaced slot's caches
             if self.pending_adm[l] is not None:
@@ -461,18 +510,31 @@ class _OffloadPlane:
         a STALE hit once the flush writes the real blocks at those ids. They
         map to their staging slot instead, whose default ``pos = -1`` payload
         reproduces the direct path's dead-block masking bit-for-bit.
+
+        Also returns the per-cluster validity mask ``valid`` (B, H, r)
+        int32 (retrofault): 0 marks a LIVE cluster whose miss fetch failed
+        its retry/deadline budget this step — its staging slot holds the
+        self-masking default payload and the attend covers its mass with the
+        estimation zone. Dead ids stay valid=1 (their pos=-1 staging payload
+        already reproduces the direct path bit-for-bit, and masking them
+        would diverge from it). A :class:`FatalTransportError` marks the
+        whole slot failed (``failed_slots``) — the serve loop finishes that
+        request with ``status="error"`` after the step; remaining slots are
+        untouched (no engine-wide quarantine).
         """
         B, H, r = ids.shape
         cap, hd = self.cap, self.hd
         idx_slots = np.zeros((B, H, r), np.int32)
+        valid = np.ones((B, H, r), np.int32)
         miss_k = np.zeros((B, H, self.r, cap, hd), np.float32)
         miss_v = np.zeros((B, H, self.r, cap, hd), np.float32)
         miss_p = np.full((B, H, self.r, cap), -1, np.int32)
         if r == 0:      # steady-zone-only plan: attend pads its own dead slot
-            return idx_slots, miss_k, miss_v, miss_p
+            return idx_slots, valid, miss_k, miss_v, miss_p
         stage = self.C + np.arange(r)
         for b in range(B):
-            if not active[b] or self.bufs[l][b] is None:
+            if not active[b] or self.bufs[l][b] is None \
+                    or b in self.failed_slots:
                 continue
             dead = ids[b] >= self.ncl[b]                    # (H, r)
             for h in range(H):
@@ -481,16 +543,26 @@ class _OffloadPlane:
                 idx_slots[b, h] = stage                     # default: staging
                 if len(live_j) == 0:
                     continue
-                slot, hit, payload = buf.translate(ids[b, h, live_j])
+                try:
+                    slot, hit, payload, ok = buf.translate(
+                        ids[b, h, live_j], deadline_s=self.fetch_deadline_s)
+                except FatalTransportError as e:
+                    # kill only this slot; partial per-head state for the
+                    # step is harmless (staged defaults self-mask) because
+                    # the request is finished before its token is harvested
+                    self.failed_slots[b] = str(e)
+                    break
                 idx_slots[b, h, live_j] = np.where(
                     hit, slot, stage[live_j]).astype(np.int32)
-                miss_j = live_j[~hit]
+                valid[b, h, live_j[~ok]] = 0
+                self.dropped_cluster_steps += int((~ok).sum())
+                miss_j = live_j[~hit & ok]
                 if len(miss_j):
-                    mk, mv, mp = self._unpack(payload[~hit])
+                    mk, mv, mp = self._unpack(payload[~hit & ok])
                     miss_k[b, h, miss_j] = mk
                     miss_v[b, h, miss_j] = mv
                     miss_p[b, h, miss_j] = mp
-        return idx_slots, miss_k, miss_v, miss_p
+        return idx_slots, valid, miss_k, miss_v, miss_p
 
     def _drain_admissions(self, l, active) -> bool:  # retrolint: hot
         """Apply deferred WaveBuffer admissions (off the attend hot path) and
@@ -548,6 +620,7 @@ class _OffloadPlane:
         new state)."""
         self._step += 1
         t = self._step
+        drops_before = self.dropped_cluster_steps
         self.trace("embed_tokens", -1, "dispatch", t)
         x = self._embed(self.params, tokens_dev)
         act_dev = jnp.asarray(active)
@@ -563,7 +636,7 @@ class _OffloadPlane:
             self.trace("readback_ids", l, "sync", t)
             ids = np.asarray(idx_r)  # retrolint: sync(per-layer id readback)
             self.trace("translate", l, "host", t)
-            idx_slots, mk, mv, mp = self._translate(l, ids, active)
+            idx_slots, valid, mk, mv, mp = self._translate(l, ids, active)
             if self.pending_adm[l] is None:     # warm cache: staging only
                 self.trace("cache_stage", l, "dispatch", t)
                 self.cache_k[l], self.cache_v[l], self.cache_p[l] = \
@@ -582,7 +655,8 @@ class _OffloadPlane:
             self.trace("attend_fn", l, "dispatch", t)
             x = self._attend(self._layers[l], self._windows[l], live, x, ctx,
                              self.cache_k[l], self.cache_v[l],
-                             self.cache_p[l], jnp.asarray(idx_slots))
+                             self.cache_p[l], jnp.asarray(idx_slots),
+                             jnp.asarray(valid))
             new_hot.append(live)
             if l + 1 < self.L:      # pipeline: next rank before this drain
                 nxt = self._launch_rank(l + 1, kv, x, act_dev, t)
@@ -590,6 +664,8 @@ class _OffloadPlane:
             self.trace("drain_admissions", l, "host", t, queued=queued)
         self.trace("unembed_logits", -1, "dispatch", t)
         logits = self._unembed(self.params, x)
+        if self.dropped_cluster_steps > drops_before:
+            self.degraded_steps += 1
         kv = kv._replace(**{f: jnp.stack([h[f] for h in new_hot])
                             for f in HOT_FIELDS})
         return logits, state._replace(kv=kv)
@@ -617,8 +693,11 @@ class _OffloadPlane:
                 if self.bufs[l][b] is None:
                     continue
                 for h in range(self.H):
-                    self.bufs[l][b][h].kv_host[off:off + k_new] = \
-                        self._pack(rk[l, b, h], rv[l, b, h], rp[l, b, h])
+                    # store_rows, not a raw slice write: the flush must
+                    # refresh the per-row crc32s or every later fetch of
+                    # these clusters would read back as corruption
+                    self.bufs[l][b][h].store_rows(
+                        off, self._pack(rk[l, b, h], rv[l, b, h], rp[l, b, h]))
             self.ncl[b] += k_new
         return state._replace(kv=kv._replace(**new_live))
 
@@ -630,6 +709,8 @@ class _OffloadPlane:
                 if row is not None:
                     for buf in row:
                         metrics.cache.merge(buf.stats)
+        metrics.degraded_steps += self.degraded_steps
+        metrics.dropped_cluster_steps += self.dropped_cluster_steps
 
 
 class ServeEngine:
@@ -652,7 +733,12 @@ class ServeEngine:
                  offload: Optional[bool] = None,
                  cache_clusters: Optional[int] = None,
                  cache_frac: Optional[float] = None,
-                 cache_policy: Optional[str] = None):
+                 cache_policy: Optional[str] = None,
+                 fault_profile: Optional[Any] = None,
+                 fetch_deadline_s: Optional[float] = None,
+                 fetch_retries: int = 2,
+                 fetch_backoff_s: float = 1e-3,
+                 max_decode_steps: Optional[int] = None):
         if admission not in ("chunked", "blocking"):
             raise ValueError(f"unknown admission mode {admission!r}")
         from repro.core.attention import resolve_attn_impl
@@ -678,6 +764,17 @@ class ServeEngine:
         self.cache_frac = retro.cache_frac if cache_frac is None \
             else cache_frac
         self.cache_policy = cache_policy or retro.cache_policy
+        # retrofault knobs (offload data plane; inert on the direct path):
+        # fault_profile accepts a FaultProfile or a "transient=0.2,seed=3"
+        # CLI spec string; fetch_deadline_s is the per-translate-call virtual
+        # budget; max_decode_steps is the per-request watchdog (any path)
+        if isinstance(fault_profile, str):
+            fault_profile = FaultProfile.parse(fault_profile)
+        self.fault_profile = fault_profile
+        self.fetch_deadline_s = fetch_deadline_s
+        self.fetch_retries = fetch_retries
+        self.fetch_backoff_s = fetch_backoff_s
+        self.max_decode_steps = max_decode_steps
         self._prefill_jit: Dict[Any, Any] = {}
         self._decode_jit: Dict[Any, Any] = {}
         self._chunk_jit: Dict[Any, Any] = {}
@@ -810,9 +907,9 @@ class ServeEngine:
                             active=active)
 
             @jax.jit
-            def attend_fn(lp, window, live, x, ctx, ck, cv, cp, idx):
+            def attend_fn(lp, window, live, x, ctx, ck, cv, cp, idx, valid):
                 return attend(lp, window, cfg, live, x, ctx, ck, cv, cp, idx,
-                              plan=plan, attn_impl=impl)
+                              valid, plan=plan, attn_impl=impl)
 
             def unembed_logits(p, x):
                 return unembed(p, cfg, x)
@@ -925,6 +1022,7 @@ class ServeEngine:
         admitting: List[Optional[_Admission]] = [None] * B
         active = np.zeros(B, bool)
         staged = np.zeros(B, np.int64)      # host mirror of local_len (retro)
+        slot_steps = np.zeros(B, np.int64)  # watchdog: decode steps per slot
         admit_t = np.zeros(B, float)
         tokens_dev = jnp.zeros((B,), jnp.int32)     # device-resident ids
         prev_sampled = None                 # step t's device ids (unsynced)
@@ -935,8 +1033,9 @@ class ServeEngine:
         key = jax.random.PRNGKey(seed)
         t_start = time.perf_counter()
 
-        def finish(i: int, req: Request):
+        def finish(i: int, req: Request, status: str = "ok"):
             req.done = True
+            req.status = status
             dt = time.perf_counter() - admit_t[i]
             n_decode = len(req.out_tokens) - 1   # first token is prefill's
             req.decode_tps = n_decode / dt if dt > 0 and n_decode > 0 else 0.0
@@ -1040,6 +1139,7 @@ class ServeEngine:
                     admit_t[i] = now
                     slots[i] = req
                     active[i] = True
+                    slot_steps[i] = 0
                     upd[i], mask[i] = tok, True
                     # device local_len after admission: chunked finalize uses
                     # the true length; a padded blocking prefill uses S_b, but
@@ -1072,7 +1172,24 @@ class ServeEngine:
                 metrics.steps += 1
                 metrics.occupied_slot_steps += int(active.sum())
                 staged[active] += 1
+                slot_steps[active] += 1
                 did_decode = True
+                # unrecoverable transport fault: finish ONLY the affected
+                # requests with a structured error status — no engine-wide
+                # quarantine, the remaining slots keep serving. The killed
+                # request's in-flight token is dropped by the lagged harvest
+                # below (slots[i] no longer holds it).
+                if plane is not None and plane.failed_slots:
+                    for i in sorted(plane.failed_slots):
+                        if slots[i] is not None:
+                            finish(i, slots[i], status="error")
+                    plane.failed_slots.clear()
+                # per-request watchdog: a request whose stop condition never
+                # triggers cannot occupy a slot forever
+                if self.max_decode_steps is not None:
+                    for i in range(B):
+                        if active[i] and slot_steps[i] >= self.max_decode_steps:
+                            finish(i, slots[i], status="timeout")
 
             # ---- harvest step t's ids (one step lagged) --------------------
             if prev_sampled is not None:

@@ -11,6 +11,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 def pytest_configure(config):
     config.addinivalue_line(
         "markers", "slow: long-running test (deselect with -m 'not slow')")
+    config.addinivalue_line(
+        "markers", "chaos: seeded fault-injection soak (scheduled CI lane; "
+                   "deselect with -m 'not chaos')")
 
 
 def cost_bytes(compiled) -> float:

@@ -318,3 +318,103 @@ def test_wave_attention_kernel_matches_core_merge():
     o_pal = wave_attention_decode(q, state, retro, plan, impl="pallas").out
     np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_pal),
                                atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Degraded decode (retrofault): per-cluster validity mask + estimation cover.
+# ---------------------------------------------------------------------------
+
+
+def _rank_with_cover(q, state, retro, plan):
+    from repro.core.attention import wave_decode_rank
+    B, H = state.k_store.shape[:2]
+    qg = q.reshape(B, H, q.shape[1] // H, q.shape[-1])
+    return wave_decode_rank(qg, state, retro, plan, with_cover=True)
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+def test_paged_kernel_all_valid_mask_is_bit_identical(emulate):
+    """Degraded-capable attend with an ALL-VALID mask must be token-for-token
+    (here: bit-for-bit) identical to the maskless path on both impls: the
+    gated cover entries are NEG/zero and contribute exactly 0.0."""
+    from unittest import mock
+
+    from repro.core.attention import wave_attention_attend
+    from repro.kernels.wave_attention import ops as wa_ops
+
+    q, state, retro, plan = _paged_state(G=2, seed=23)
+    idx_r, el, cs, vs, cover = _rank_with_cover(q, state, retro, plan)
+    valid = jnp.ones(idx_r.shape, jnp.int32)
+    orig = wa_ops.paged_wave_attention
+
+    def forced(*a, **k):
+        k["emulate"] = emulate
+        return orig(*a, **k)
+
+    with mock.patch.object(wa_ops, "paged_wave_attention", forced):
+        for impl in ("jnp", "fused"):
+            base = wave_attention_attend(q, state, retro, plan, idx_r, el,
+                                         cs, vs, impl=impl).out
+            masked = wave_attention_attend(q, state, retro, plan, idx_r, el,
+                                           cs, vs, impl=impl, valid=valid,
+                                           cover=cover).out
+            np.testing.assert_array_equal(np.asarray(base),
+                                          np.asarray(masked))
+
+
+@pytest.mark.parametrize("emulate", [False, True],
+                         ids=["pallas-interpret", "jnp-emulation"])
+def test_paged_kernel_validity_mask_parity(emulate):
+    """Mixed validity mask (fetch-failed clusters dropped from the retrieval
+    zone, covered by the estimation zone): the fused paged kernel agrees with
+    the reference execution-buffer path."""
+    from unittest import mock
+
+    from repro.core.attention import wave_attention_attend
+    from repro.kernels.wave_attention import ops as wa_ops
+
+    q, state, retro, plan = _paged_state(G=2, seed=29)
+    idx_r, el, cs, vs, cover = _rank_with_cover(q, state, retro, plan)
+    rng = np.random.default_rng(31)
+    valid = jnp.asarray(rng.integers(0, 2, idx_r.shape), jnp.int32)
+    o_jnp = wave_attention_attend(q, state, retro, plan, idx_r, el, cs, vs,
+                                  impl="jnp", valid=valid, cover=cover).out
+    orig = wa_ops.paged_wave_attention
+
+    def forced(*a, **k):
+        k["emulate"] = emulate
+        return orig(*a, **k)
+
+    with mock.patch.object(wa_ops, "paged_wave_attention", forced):
+        o_fused = wave_attention_attend(q, state, retro, plan, idx_r, el, cs,
+                                        vs, impl="fused", valid=valid,
+                                        cover=cover).out
+    np.testing.assert_allclose(np.asarray(o_jnp), np.asarray(o_fused),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_validity_mask_equals_physical_block_removal():
+    """The mask's retrieval-zone semantics alone (no cover): masking cluster
+    j out is bit-equal to handing the attend a block store whose slot j is a
+    dead (pos = -1) block — the degraded step attends over exactly the
+    blocks that arrived."""
+    from repro.core.attention import wave_attention_attend
+
+    q, state, retro, plan = _paged_state(G=2, seed=37)
+    idx_r, el, cs, vs, _ = _rank_with_cover(q, state, retro, plan)
+    B, H, r = idx_r.shape
+    rng = np.random.default_rng(41)
+    valid = jnp.asarray(rng.integers(0, 2, (B, H, r)), jnp.int32)
+
+    take = lambda a: jnp.take_along_axis(
+        a, idx_r.reshape(idx_r.shape + (1,) * (a.ndim - 3)), axis=2)
+    kb, vb, pb = take(state.k_store), take(state.v_store), take(state.pos_store)
+    slots = jnp.broadcast_to(jnp.arange(r, dtype=jnp.int32), idx_r.shape)
+    masked = wave_attention_attend(q, state, retro, plan, slots, el, cs, vs,
+                                   kv_src=(kb, vb, pb), impl="jnp",
+                                   valid=valid).out
+    pb_dead = jnp.where(valid[..., None] > 0, pb, -1)
+    removed = wave_attention_attend(q, state, retro, plan, slots, el, cs, vs,
+                                    kv_src=(kb, vb, pb_dead), impl="jnp").out
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(removed))

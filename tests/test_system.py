@@ -286,15 +286,18 @@ def test_engine_runs_across_flush_boundary(setup):
 
 
 def _serve_case(params, *, offload, frac=0.25, impl="jnp",
-                admission="chunked", news=(8, 6, 20)):
+                admission="chunked", news=(8, 6, 20), **eng_kw):
     """Shared ragged scenario: 3 requests on 2 slots (slot reuse grafts a new
-    request over a retired one), generation crossing no/one flush boundary."""
+    request over a retired one), generation crossing no/one flush boundary.
+    ``eng_kw`` passes retrofault knobs (fault_profile, fetch_deadline_s, ...)
+    straight to the engine."""
     rng = np.random.default_rng(13)
     lens = [S, 256, 320]
     prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32) for L in lens]
     eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
                       max_context=S, admission=admission, prefill_chunk=96,
-                      attn_impl=impl, offload=offload, cache_frac=frac)
+                      attn_impl=impl, offload=offload, cache_frac=frac,
+                      **eng_kw)
     reqs = [Request(prompt=p.copy(), max_new_tokens=n)
             for p, n in zip(prompts, news)]
     m = eng.serve(reqs, batch_size=2)
@@ -380,6 +383,106 @@ def test_offload_eviction_pressure(setup):
     assert m.bytes_over_link > 0
     assert m.cache_hit_ratio < 0.9      # pressure: far from full reuse
     assert m.bytes_from_cache >= 0
+
+
+def test_offload_zero_rate_fault_profile_is_identity(setup):
+    """retrofault acceptance (faults disabled): a FaultyTransport with every
+    rate at zero is a pass-through — token-identical to the direct path,
+    no degraded steps, no fault counters."""
+    params = setup[0]
+    ref, _ = _serve_case(params, offload=False)
+    out, m = _serve_case(params, offload=True, fault_profile="seed=5",
+                         fetch_deadline_s=10.0)
+    assert out == ref
+    assert m.degraded_steps == 0 and m.dropped_cluster_steps == 0
+    assert m.cache_faults == 0 and m.cache_failed_fetches == 0
+
+
+def test_offload_recoverable_faults_reproduce_outputs(setup):
+    """retrofault acceptance (recoverable regime): transient faults with
+    ample retries and no deadline are absorbed by the retry loop — outputs
+    reproduce the fault-free run exactly, with nonzero fault/retry
+    telemetry and zero degraded steps."""
+    params = setup[0]
+    ref, _ = _serve_case(params, offload=True)
+    out, m = _serve_case(params, offload=True,
+                         fault_profile="transient=0.3,seed=7",
+                         fetch_retries=8)
+    assert out == ref
+    assert m.cache_faults > 0 and m.cache_retries > 0
+    assert m.degraded_steps == 0 and m.cache_failed_fetches == 0
+
+
+@pytest.mark.chaos
+def test_offload_chaos_soak_degrades_without_wedging(setup):
+    """retrofault acceptance (degraded regime): a seeded 20%-transient
+    schedule with corruption, latency spikes, no retries and a fetch
+    deadline tighter than a spike. Every request still completes (no crash,
+    no wedge); failed fetches are masked out of the retrieval zone and the
+    telemetry records the degradation."""
+    params = setup[0]
+    news = (8, 6, 20)
+    out, m = _serve_case(
+        params, offload=True, news=news,
+        fault_profile="transient=0.2,corrupt=0.02,spike=0.3,seed=3",
+        fetch_retries=0, fetch_deadline_s=0.01)
+    assert m.tokens_out == sum(news)
+    assert [len(o) for o in out] == list(news)
+    assert m.cache_faults > 0 and m.cache_failed_fetches > 0
+    assert m.degraded_steps > 0
+    assert m.dropped_cluster_steps >= m.degraded_steps
+
+
+@pytest.mark.chaos
+def test_offload_chaos_soak_seed_deterministic(setup):
+    """Same seed => same fault schedule => identical outputs and identical
+    degradation telemetry across runs."""
+    params = setup[0]
+    kw = dict(offload=True, fault_profile="transient=0.25,spike=0.3,seed=11",
+              fetch_retries=1, fetch_deadline_s=0.01)
+    out_a, m_a = _serve_case(params, **kw)
+    out_b, m_b = _serve_case(params, **kw)
+    assert out_a == out_b
+    assert (m_a.cache_faults, m_a.cache_failed_fetches, m_a.degraded_steps,
+            m_a.dropped_cluster_steps) == \
+           (m_b.cache_faults, m_b.cache_failed_fetches, m_b.degraded_steps,
+            m_b.dropped_cluster_steps)
+
+
+def test_fatal_fault_finishes_request_with_error_status(setup):
+    """An unrecoverable link fault poisons only the affected request: it
+    finishes with status='error' (structured, no engine-wide quarantine) and
+    the serve loop returns normally."""
+    params = setup[0]
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, CFG.vocab, L).astype(np.int32)
+               for L in (S, 256)]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S, offload=True, cache_frac=0.25,
+                      fault_profile="fatal=1.0,seed=2")
+    reqs = [Request(prompt=p.copy(), max_new_tokens=8) for p in prompts]
+    m = eng.serve(reqs, batch_size=2)
+    assert all(r.status == "error" for r in reqs)
+    assert all(len(r.out_tokens) < 8 for r in reqs)
+    assert m.steps >= 1                  # the loop ran and unwound cleanly
+
+
+def test_watchdog_finishes_runaway_request_with_timeout(setup):
+    """Per-request decode watchdog: a request that would never finish on its
+    own (huge max_new_tokens) is cut off after max_decode_steps with
+    status='timeout'; a short request on the same batch stays status='ok'."""
+    params = setup[0]
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, CFG.vocab, 256).astype(np.int32)
+               for _ in range(2)]
+    eng = ServeEngine(CFG, params, runtime="retro", gen_headroom=256,
+                      max_context=S, max_decode_steps=6)
+    reqs = [Request(prompt=prompts[0], max_new_tokens=200),
+            Request(prompt=prompts[1], max_new_tokens=3)]
+    eng.serve(reqs, batch_size=2)
+    assert reqs[0].status == "timeout"
+    assert len(reqs[0].out_tokens) <= 7   # cut at the watchdog, not at 200
+    assert reqs[1].status == "ok" and len(reqs[1].out_tokens) == 3
 
 
 def test_offload_requires_retro_attention(setup):

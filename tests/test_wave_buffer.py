@@ -269,9 +269,9 @@ def test_repeat_miss_after_window_refetches_under_eviction():
     buf.translate(np.array([2, 3]))
     buf.apply_updates()                       # window 2: 0,1 evicted (LRU)
     assert buf.table.cache_slot[0] == -1
-    host[0] += 1000.0                         # host store moves on
+    buf.store_rows(0, host[0:1] + 1000.0)     # host store moves on (flush)
     link_before = buf.stats.bytes_over_link
-    slot, hit, payload = buf.translate(np.array([0]))
+    slot, hit, payload, ok = buf.translate(np.array([0]))
     assert not hit[0]
     np.testing.assert_array_equal(payload[0], host[0])   # fresh, not stale
     assert buf.stats.bytes_over_link == link_before + per  # real re-fetch
@@ -308,3 +308,164 @@ def test_byte_counters_consistent_across_windows():
     total = (buf.stats.bytes_over_link + buf.stats.bytes_from_pending
              + buf.stats.bytes_from_cache)
     assert total == buf.stats.lookups * buf.bytes_per_cluster
+
+# --------------------------------------------------------------- retrofault
+
+from repro.core.wave_buffer import (  # noqa: E402
+    FatalTransportError, FaultProfile, FaultyTransport, LinkTransport,
+    TransientFault)
+
+
+class _ScriptedTransport(LinkTransport):
+    """Deterministic transport: fail the first ``fail_first`` attempts of
+    every cluster, charge ``latency_s`` per successful fetch."""
+
+    def __init__(self, fail_first=0, latency_s=0.0):
+        self.fail_first = fail_first
+        self.latency_s = latency_s
+        self.attempts = {}
+
+    def fetch(self, store, cid):
+        n = self.attempts.get(cid, 0)
+        self.attempts[cid] = n + 1
+        if n < self.fail_first:
+            raise TransientFault(f"scripted failure {n} for {cid}")
+        return store[cid], self.latency_s
+
+
+def _mk_t(transport, n_clusters=16, cache=4, **kw):
+    host = np.arange(n_clusters * 16, dtype=np.float32).reshape(n_clusters, 16)
+    return WaveBuffer(host, cache_clusters=cache, transport=transport,
+                      **kw), host
+
+
+def test_translate_rejects_out_of_range_ids():
+    """Regression: an out-of-range id from a buggy rank must fail loudly at
+    the buffer boundary, not index garbage deep in numpy."""
+    buf, _ = _mk(n_clusters=16, cache=4)
+    with pytest.raises(ValueError, match="out of range"):
+        buf.translate(np.array([3, 16]))
+    with pytest.raises(ValueError, match="out of range"):
+        buf.translate(np.array([-17]))      # would silently wrap in numpy
+    # stats untouched by the rejected call beyond the lookup bump
+    assert buf.stats.bytes_over_link == 0
+
+
+def test_transient_faults_retried_to_success():
+    """A miss whose first attempts fail transiently recovers within the retry
+    budget: payload correct, faults/retries counted, zero failed fetches."""
+    tr = _ScriptedTransport(fail_first=2)
+    buf, host = _mk_t(tr, max_retries=2)
+    slot, hit, payload, ok = buf.translate(np.array([5]))
+    assert ok[0] and not hit[0]
+    np.testing.assert_array_equal(payload[0], host[5])
+    assert buf.stats.faults == 2 and buf.stats.retries == 2
+    assert buf.stats.failed_fetches == 0
+    # the recovered miss is pending like any other and admits normally
+    buf.apply_updates()
+    assert buf.table.cache_slot[5] >= 0
+
+
+def test_retry_exhaustion_fails_step_then_reconciles():
+    """Retries exhausted -> the miss FAILS for this step (ok False, zero
+    payload, not pending); a later update window refetches and recovers."""
+    tr = _ScriptedTransport(fail_first=3)           # 3 attempts all fail
+    buf, host = _mk_t(tr, max_retries=2)
+    slot, hit, payload, ok = buf.translate(np.array([5, 7]))
+    assert not ok.any()
+    assert (payload == 0).all()
+    assert 5 not in buf._pending_map and 7 not in buf._pending_map
+    assert buf.stats.failed_fetches == 2
+    buf.apply_updates()
+    # next window: cluster 5's attempt counter is past fail_first -> recovers
+    slot, hit, payload, ok = buf.translate(np.array([5]))
+    assert ok[0]
+    np.testing.assert_array_equal(payload[0], host[5])
+
+
+def test_deadline_budget_fails_slow_fetches():
+    """Per-call virtual deadline: fetch latency over budget -> failed fetch;
+    ample budget -> same fetch succeeds. No real time involved."""
+    buf, host = _mk_t(_ScriptedTransport(latency_s=0.2))
+    slot, hit, payload, ok = buf.translate(np.array([3]), deadline_s=0.1)
+    assert not ok[0] and buf.stats.failed_fetches == 1
+    slot, hit, payload, ok = buf.translate(np.array([3]), deadline_s=0.5)
+    assert ok[0]
+    np.testing.assert_array_equal(payload[0], host[3])
+
+
+def test_deadline_budget_shared_across_misses():
+    """The deadline budget is shared by all misses of one translate call:
+    with 0.2s per fetch and a 0.5s budget only the first two fit."""
+    buf, host = _mk_t(_ScriptedTransport(latency_s=0.2))
+    slot, hit, payload, ok = buf.translate(np.array([0, 1, 2, 3]),
+                                           deadline_s=0.5)
+    assert ok.tolist() == [True, True, False, False]
+    assert buf.stats.failed_fetches == 2
+
+
+def test_corrupt_payload_caught_by_checksum():
+    """In-flight corruption is caught by the per-row crc32 and retried; with
+    corruption on every attempt the fetch fails cleanly (never serves bad
+    bytes). The host store itself is never damaged."""
+    tr = FaultyTransport(FaultProfile(corrupt=1.0, seed=0))
+    buf, host = _mk_t(tr, max_retries=1)
+    before = host.copy()
+    slot, hit, payload, ok = buf.translate(np.array([2]))
+    assert not ok[0] and (payload[0] == 0).all()
+    assert buf.stats.corrupt_fetches == 2          # initial + 1 retry
+    assert buf.stats.failed_fetches == 1
+    np.testing.assert_array_equal(host, before)    # store undamaged
+
+
+def test_store_rows_refreshes_checksums():
+    """store_rows (the flush path) keeps fetches verifiable; a raw slice
+    write would leave a stale crc and read back as corruption."""
+    buf, host = _mk_t(LinkTransport())
+    buf.store_rows(4, host[4:6] * 2.0 + 1.0)
+    slot, hit, payload, ok = buf.translate(np.array([4, 5]))
+    assert ok.all()
+    np.testing.assert_array_equal(payload, host[4:6])
+    # now model the bug the docstring warns about: stale crc reads as corrupt
+    buf.apply_updates()
+    buf.kv_host[6] += 1.0                          # bypasses store_rows
+    slot, hit, payload, ok = buf.translate(np.array([6]))
+    assert not ok[0] and buf.stats.corrupt_fetches > 0
+
+
+def test_fatal_transport_error_propagates():
+    tr = FaultyTransport(FaultProfile(fatal=1.0, seed=0))
+    buf, _ = _mk_t(tr)
+    with pytest.raises(FatalTransportError):
+        buf.translate(np.array([1]))
+
+
+def test_fault_schedule_is_seed_deterministic():
+    """Two buffers driven identically with same-seed FaultyTransports observe
+    the same fault schedule (same stats, same ok masks)."""
+    profile = FaultProfile(transient=0.4, corrupt=0.1, spike=0.3,
+                           latency_s=0.01, seed=7)
+    runs = []
+    for _ in range(2):
+        buf, _ = _mk_t(FaultyTransport(profile), n_clusters=32, cache=8,
+                       max_retries=2)
+        oks = []
+        rng = np.random.default_rng(0)
+        for _ in range(12):
+            ids = rng.integers(0, 32, size=4)
+            *_, ok = buf.translate(ids, deadline_s=0.05)
+            oks.append(ok.copy())
+            buf.apply_updates()
+        runs.append((oks, vars(buf.stats).copy()))
+    for a, b in zip(runs[0][0], runs[1][0]):
+        np.testing.assert_array_equal(a, b)
+    assert runs[0][1] == runs[1][1]
+
+
+def test_faulty_transport_default_rates_are_clean():
+    """A zero-rate FaultyTransport is byte-identical to the production
+    transport (the rate==0 guards never consume rng draws)."""
+    buf, host = _mk_t(FaultyTransport(FaultProfile()))
+    out = buf.assemble(np.array([1, 2, 3]))
+    np.testing.assert_array_equal(out, host[[1, 2, 3]])
+    assert buf.stats.faults == 0 and buf.stats.failed_fetches == 0
