@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timeit, tiny_retro
-from repro.core.attention import (DenseCache, full_attention_decode,
-                                  wave_attention_decode)
+from repro.core.attention import (DenseCache, _estimation_zone,
+                                  _gather_clusters, full_attention_decode,
+                                  rank_clusters, wave_attention_decode)
 from repro.core.wave_index import max_clusters, prefill_build
 from repro.core.zones import plan_zones
 from repro.data.pipeline import clustered_keys
@@ -55,6 +56,91 @@ def run():
             recall = sel[hot].mean()
             emit(f"fig18_budget_r{frac}_est{int(est)}", us,
                  f"rel_err={rel:.4f};hot_recall={recall:.3f}")
+
+
+def compare_accuracy(quick: bool = True) -> dict:
+    """Fidelity snapshot at the paper budget, for ``run.py --quick`` →
+    ``BENCH_accuracy.json``.
+
+    Three numbers, all from one prefix: (a) Fig. 18(a) attention-output
+    relative error vs full attention at ~1.8% retrieval budget, with and
+    without the estimation zone; (b) Fig. 18(b) hot-token recall through the
+    retrieval zone; (c) the estimation-zone Jensen logit error — max over
+    live estimation clusters of ``|(cs_i + log s_i) - logsumexp_t(q·k_t)|``,
+    the per-cluster gap the paper's Eq. 2-4 accuracy bound controls.
+    """
+    import math
+
+    n, hd = (4096 if quick else 8192), 64
+    retro = tiny_retro()
+    keys, q, hot = clustered_keys(n, hd, n_hot=8, seed=0)
+    rng = np.random.default_rng(1)
+    vals = rng.standard_normal((n, hd)).astype(np.float32)
+    kj = jnp.asarray(keys)[None, :, None, :]
+    vj = jnp.asarray(vals)[None, :, None, :]
+    state = prefill_build(kj, vj, retro, max_clusters(n, retro, 256),
+                          dtype=jnp.float32)
+    cache = DenseCache(jnp.swapaxes(kj, 1, 2), jnp.swapaxes(vj, 1, 2),
+                       jnp.full((kj.shape[0],), n, jnp.int32))
+    qj = jnp.asarray(q)[None, None, :]
+    ref = np.asarray(full_attention_decode(qj, cache))
+
+    m = int(state.n_clusters[0])
+    plan0 = plan_zones(n, retro, 256)
+
+    def _point(frac):
+        plan = plan0._replace(r=max(1, int(m * frac)))
+        rel = {}
+        for est in (True, False):
+            p = plan if est else plan._replace(e=0)
+            o = np.asarray(wave_attention_decode(
+                qj, state, retro, p, use_estimation=est).out)
+            rel[est] = float(np.linalg.norm(o - ref) / np.linalg.norm(ref))
+        res = wave_attention_decode(qj, state, retro, plan)
+        pos = np.asarray(state.pos_store[0, 0])[
+            np.asarray(res.retrieved)[0, 0]].reshape(-1)
+        sel = np.zeros(n, bool)
+        sel[pos[pos >= 0]] = True
+        return plan, rel, float(sel[hot].mean())
+
+    frac = 0.018
+    plan, rel, recall = _point(frac)
+    _, rel_hi, recall_hi = _point(0.1)
+
+    # (c) estimation-zone Jensen logit error against the true per-cluster
+    # logsumexp over the stored tokens (no overflow correction: the metric
+    # is the raw ``cs + log s`` estimate the kernel's est_logit path uses).
+    qg = qj.reshape(1, 1, 1, hd)
+    scale = 1.0 / math.sqrt(hd)
+    cs, idx_re = rank_clusters(qg, state, plan, None, None)
+    idx_e = idx_re[:, :, plan.r:]
+    est_logit, _, _ = _estimation_zone(
+        state, cs, idx_re[:, :, :plan.r], idx_e,
+        use_estimation=True, overflow_correction=False)
+    k_e, _, pos_e = _gather_clusters(state, idx_e)         # (B,H,e,cap,hd)
+    tok = jnp.einsum("bhgd,bhecd->bhgec", qg.astype(jnp.float32),
+                     k_e.astype(jnp.float32),
+                     preferred_element_type=jnp.float32) * scale
+    tok = jnp.where((pos_e >= 0)[:, :, None, :, :], tok, -1e30)
+    true_logit = jax.nn.logsumexp(tok, axis=-1)            # (B,H,G,e)
+    live = np.asarray(
+        jnp.take_along_axis(state.size, idx_e, axis=2) > 0)[:, :, None, :]
+    gap = np.abs(np.asarray(est_logit - true_logit))[live]
+    max_err = float(gap.max()) if gap.size else 0.0
+    mean_err = float(gap.mean()) if gap.size else 0.0
+
+    out = {"n": n, "budget_frac": frac, "retrieval_clusters": int(plan.r),
+           "estimation_clusters": int(idx_e.shape[2]),
+           "rel_err_est": rel[True], "rel_err_noest": rel[False],
+           "hot_recall": recall,
+           "at_frac_0.1": {"rel_err_est": rel_hi[True],
+                           "hot_recall": recall_hi},
+           "est_zone_max_abs_logit_err": max_err,
+           "est_zone_mean_abs_logit_err": mean_err}
+    emit(f"fig18_quick_r{frac}", 0.0,
+         f"rel_err_est={rel[True]:.4f};rel_err_noest={rel[False]:.4f};"
+         f"hot_recall={recall:.3f};est_logit_err={max_err:.3f}")
+    return out
 
 
 if __name__ == "__main__":

@@ -8,7 +8,9 @@
 # the retrofault degradation trajectory (decode tps + degraded-step fraction
 # under seeded fault schedules at rates {0, 0.05, 0.2}) and writes them to a
 # ``BENCH_throughput.json`` artifact so the perf trajectory is recorded per
-# PR.
+# PR. It also runs the fig18 fidelity snapshot (attention rel-err at the
+# paper budget with/without estimation, hot-token recall, estimation-zone
+# Jensen logit error) into a ``BENCH_accuracy.json`` artifact.
 from __future__ import annotations
 
 import json
@@ -55,6 +57,22 @@ def main() -> None:
             "zero-rate fault schedule recorded degraded steps"
         assert all(v["decode_tps"] > 0 for v in dr.values()), \
             "degradation comparison missing decode tps"
+
+        from benchmarks import bench_accuracy_budget
+        acc = bench_accuracy_budget.compare_accuracy(quick=True)
+        with open("BENCH_accuracy.json", "w") as f:
+            json.dump(acc, f, indent=2)
+            f.write("\n")
+        print("# accuracy snapshot -> BENCH_accuracy.json", flush=True)
+        print(json.dumps(acc, indent=2))
+        assert acc["rel_err_est"] < acc["rel_err_noest"], \
+            "estimation zone did not improve fidelity at the paper budget"
+        assert acc["at_frac_0.1"]["rel_err_est"] < acc["rel_err_est"], \
+            "attention error did not shrink with a larger retrieval budget"
+        assert acc["at_frac_0.1"]["hot_recall"] >= acc["hot_recall"] > 0, \
+            "hot-token recall not positive / not monotone in budget"
+        assert acc["est_zone_max_abs_logit_err"] < 2.0, \
+            "estimation-zone Jensen logit error blew past the Eq.2-4 regime"
         return
 
     from benchmarks import (bench_accuracy_budget, bench_cache,

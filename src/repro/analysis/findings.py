@@ -263,6 +263,100 @@ reads or re-donates it. The AST rule RL004 catches the lexical version of
 this; RL305 checks the actual recorded schedule, where the reuse can span
 stages that no single function body shows.""")
 
+_rule(
+    "RL401", "sub-f32-softmax-chain",
+    "A softmax/exp/log/LSE-chain transcendental computes on a sub-f32 "
+    "float operand.",
+    """The accuracy-bounded estimation math (paper Sec. 4.4) hinges on the
+softmax/log-sum-exp chain being computed in f32: the online-softmax fold's
+running max/normalizer, the estimation zone's `cs + log(sz)` Jensen logits
+and the retrieval-cover entries all feed `exp`/`log` whose bf16 evaluation
+loses ~5 bits of mantissa exactly where the attention weights are decided.
+retronum walks every stage jaxpr (and the Pallas kernel body) and flags any
+`exp`/`log`/`log1p`/`expm1`/`logistic`/`tanh`/`exp2`/`log2` primitive whose
+float operand is narrower than the stage's declared softmax floor
+(`numerics["softmax"]`, f32 everywhere today). Fix: upcast the *operand
+row* (`x.astype(jnp.float32)`) — small, per-tile — never store the chain in
+bf16.""")
+
+_rule(
+    "RL402", "dot-accumulation-contract",
+    "A dot/einsum violates the storage-dtype-operand + "
+    "preferred_element_type=f32 accumulation contract.",
+    """Two ways to get mixed-precision matmuls wrong, both flagged here:
+(a) a `dot_general` with sub-f32 operands and no
+`preferred_element_type=jnp.float32` accumulates in bf16 (jax defaults the
+accumulator to the operand dtype); (b) the hoisted-cast hazard — an
+explicit `astype(jnp.float32)` on a large stored operand *before* the dot.
+XLA hoists the convert through the gather/slice that follows it, so the
+ENTIRE store is converted and written back at 2x the bytes every decode
+step (the documented idiom at `core/attention.py` §Perf). The contract:
+keep operands in storage dtype, pass `preferred_element_type=jnp.float32`,
+and let the MXU/kernel widen per tile in registers/VMEM. retronum flags
+(a) structurally and (b) by provenance: a widening convert of >= 4 MiB
+feeding a dot operand outside a Pallas kernel body.""")
+
+_rule(
+    "RL403", "double-rounding",
+    "A value is round-tripped f32 -> sub-f32 -> f32 before accumulation "
+    "(two roundings where the contract allows one).",
+    """Narrowing to bf16 and immediately widening back to f32 silently
+rounds the value twice: once at the narrowing (drops 16 mantissa bits) and
+once wherever the widened value is consumed against other rounded values.
+The numerics contract allows exactly ONE narrowing per value — either the
+sanctioned output downcast (RL404) or a storage write that a later stage
+widens ON READ via the dot contract (RL402). A convert chain
+`f32 -> bf16 -> f32` inside one stage is never that: it is usually a
+leftover `astype` pair from refactoring, and it turns the error bound of
+the fold from one-rounding to two. retronum detects the widening convert
+whose producer is a narrowing convert from an equal-or-wider dtype.""")
+
+_rule(
+    "RL404", "unsanctioned-downcast",
+    "A narrowing cast is consumed by general compute — the only sanctioned "
+    "narrowings are the stage output and same-dtype storage writes.",
+    """Per-stage, the numerics contract sanctions exactly two narrowings
+(`numerics["narrow"] == "output-only"`): the final `astype(q.dtype)` on the
+stage OUTPUT (values leave the f32 accumulation domain once, at the end),
+and a cast that feeds a same-dtype STORAGE write (scatter /
+dynamic_update_slice into a bf16 store, e.g. `dense_cache_append`) or a
+dot_general that re-widens via `preferred_element_type=f32` (the
+`p.astype(v.dtype)` probability-operand idiom). Any other consumer of a
+narrowed value — adds, muls, reductions, transcendentals — means part of
+the fold now runs in bf16 mid-stage, which is invisible to parity tests at
+small sizes and exactly the regression the paper's accuracy claim cannot
+absorb. Fix: move the narrowing to the stage boundary, or drop it.""")
+
+_rule(
+    "RL405", "lse-merge-dtype-mismatch",
+    "The LSE-merge path (return_parts / distributed psum) carries a "
+    "sub-f32 partial accumulator or collective.",
+    """`wave_attention_attend(..., return_parts=True)` returns the raw
+(num, den, m) flash partials so shards (`core/distributed.py`) — and the
+roadmap's CPU/GPU co-execution split — can merge attentions computed over
+disjoint cluster sets: `m_glob = pmax(m)`, rescale by `exp(m - m_glob)`,
+`psum` numerator and denominator, divide once. The merge is only exact if
+every partial stays f32 until the single final downcast: a bf16 `den`
+loses the low bits that distinguish near-tied shards, and a collective
+over bf16 partials rounds once PER SHARD. retronum checks the parts
+triple's dtypes at the trace boundary and flags any
+psum/pmax/pmin collective whose float operand is sub-f32.""")
+
+_rule(
+    "RL406", "cast-site-inventory",
+    "Certified VMEM-stage cast-site inventory for the paged kernel "
+    "(advice).",
+    """Not a defect — the certified list of every per-block widening cast
+inside the paged wave-attention kernel bodies (`kernel.py`, both
+double_buffer flavors, traced through `ops.paged_wave_attention`'s
+kernel-inlining path). These VMEM-stage casts are exactly where the
+roadmap's quantized payload store will hook per-cluster dequantization
+(int8/fp8 row -> scale -> f32 tile), so the inventory doubles as the
+integration-point contract for that PR: a cast site disappearing or a new
+un-inventoried cast appearing shows up as a diff in this advice list (and
+in the `--json-out` artifact CI uploads). Each entry records the source
+site, src/dst dtypes and the block shape being widened.""")
+
 
 def explain_rule(rule_id: str) -> Optional[str]:
     r = RULES.get(rule_id)

@@ -33,6 +33,7 @@ import jax
 import jax.tree_util as jtu
 import numpy as np
 
+from repro.analysis import numerics_check
 from repro.analysis.findings import Finding
 
 ENGINE_PATH = "src/repro/serving/engine.py"
@@ -380,6 +381,12 @@ def run_contract_checks(verbose=None) -> List[Finding]:
             findings += missed_donation_findings(
                 rec, tuple(contract["donate"])
                 + tuple(contract.get("copy_ok", ())))
+            # retronum (RL401-RL405): the stage's declared numerics
+            # contract, checked over the same recorded trace
+            if contract.get("numerics") is not None:
+                findings += numerics_check.stage_findings(
+                    rec.fn, rec.avals, name, contract["numerics"],
+                    ENGINE_PATH)
     # a contract stage that NO run exercised means the registry rotted
     for name in SERVE_STAGES:
         if name not in checked and all(r.expected.get(name, 0) == 0

@@ -396,6 +396,146 @@ def _selftest_rl305() -> List[str]:
     return fails
 
 
+# ------------------------------------------------------- retronum (RL4xx)
+def _num_check(fn, avals, rule: str, want_bad: bool, label: str,
+               contract=None) -> List[str]:
+    """Trace ``fn`` through the retronum pass; assert the rule fires (bad
+    twin) or that NO error fires at all (good twin)."""
+    from repro.analysis.numerics_check import numerics_findings
+    fs = numerics_findings(fn, avals, label,
+                           path="src/repro/analysis/selftest.py",
+                           contract=contract)
+    errs = [f for f in fs if f.severity == "error"]
+    if want_bad:
+        if not any(f.rule == rule for f in errs):
+            return [f"{rule}: {label} not flagged"]
+        return []
+    if errs:
+        return [f"{rule}: {label} falsely flagged: {errs[0].render()}"]
+    return []
+
+
+def _selftest_rl401() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    aval = (jax.ShapeDtypeStruct((8, 16), jnp.bfloat16),)
+    # a bf16 LSE chain: exp runs on the storage dtype
+    fails = _num_check(lambda x: jax.nn.softmax(x, axis=-1), aval,
+                       "RL401", True, "bf16 softmax chain")
+    fails += _num_check(
+        lambda x: jax.nn.softmax(x.astype(jnp.float32), axis=-1), aval,
+        "RL401", False, "f32-upcast softmax chain")
+    return fails
+
+
+def _selftest_rl402() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    a = jax.ShapeDtypeStruct((2048, 2048), jnp.bfloat16)   # 8 MiB "store"
+    b = jax.ShapeDtypeStruct((2048, 64), jnp.bfloat16)
+    # (a) sub-f32 operands, accumulator defaults to bf16
+    fails = _num_check(
+        lambda x, y: jnp.einsum("ij,jk->ik", x, y), (a, b),
+        "RL402", True, "einsum without preferred_element_type")
+    # (b) the hoisted-cast hazard: whole-store astype(f32) before the dot
+    fails += _num_check(
+        lambda x, y: jnp.einsum("ij,jk->ik", x.astype(jnp.float32),
+                                y.astype(jnp.float32)), (a, b),
+        "RL402", True, "explicit whole-store pre-upcast")
+    fails += _num_check(
+        lambda x, y: jnp.einsum("ij,jk->ik", x, y,
+                                preferred_element_type=jnp.float32), (a, b),
+        "RL402", False, "storage operands + preferred_element_type")
+    return fails
+
+
+def _selftest_rl403() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    aval = (jax.ShapeDtypeStruct((8, 8), jnp.float32),)
+    fails = _num_check(
+        lambda x: x.astype(jnp.bfloat16).astype(jnp.float32) + 1.0, aval,
+        "RL403", True, "f32->bf16->f32 round trip")
+    fails += _num_check(lambda x: x + 1.0, aval,
+                        "RL403", False, "straight f32 chain")
+    return fails
+
+
+def _selftest_rl404() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    aval = (jax.ShapeDtypeStruct((8, 8), jnp.float32),)
+    # narrowed mid-stage, then general compute consumes the bf16 value
+    fails = _num_check(
+        lambda x: x.astype(jnp.bfloat16) * jnp.bfloat16(2.0), aval,
+        "RL404", True, "mid-stage downcast consumed by compute")
+    # output-only narrowing: the sanctioned final astype
+    fails += _num_check(
+        lambda x: (x * 2.0).astype(jnp.bfloat16), aval,
+        "RL404", False, "output-only downcast")
+    return fails
+
+
+def _selftest_rl405() -> List[str]:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.analysis.numerics_check import parts_findings
+    f32 = jnp.float32
+    avals = (jax.ShapeDtypeStruct((2, 4), f32),
+             jax.ShapeDtypeStruct((2,), f32),
+             jax.ShapeDtypeStruct((2,), f32))
+    fails = []
+    fs = parts_findings(
+        lambda n, d, m: (n.astype(jnp.bfloat16), d, m), avals,
+        "bf16-num", path="selftest")
+    if not any(f.rule == "RL405" for f in fs):
+        fails.append("RL405: bf16 LSE-merge partial not flagged")
+    fs = parts_findings(lambda n, d, m: (n, d, m), avals,
+                        "f32-parts", path="selftest")
+    if fs:
+        fails.append(f"RL405: f32 parts falsely flagged: {fs[0].render()}")
+    # collective flavor: a psum over bf16 partials inside shard_map
+    try:
+        from jax.experimental.shard_map import shard_map
+    except ImportError:                                    # pragma: no cover
+        from jax import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+
+    def collective(cast):
+        def body(x):
+            y = x.astype(jnp.bfloat16) if cast else x
+            return jax.lax.psum(y, "x")
+        return shard_map(body, mesh=mesh, in_specs=P(), out_specs=P(),
+                         check_rep=False)
+    aval = (jax.ShapeDtypeStruct((8,), f32),)
+    fails += _num_check(collective(True), aval,
+                        "RL405", True, "psum over bf16 partials")
+    fails += _num_check(collective(False), aval,
+                        "RL405", False, "psum over f32 partials")
+    return fails
+
+
+def _selftest_rl406() -> List[str]:
+    from repro.analysis.numerics_check import (_pallas_avals,
+                                               numerics_findings)
+    inventory: List = []
+    fn, avals = _pallas_avals(double_buffer=True)
+    fs = numerics_findings(fn, avals, "paged_wave_attention",
+                           path="src/repro/kernels/wave_attention/ops.py",
+                           inventory=inventory)
+    fails = []
+    if [f for f in fs if f.severity == "error"]:
+        fails.append(f"RL406: kernel trace errored: {fs[0].render()}")
+    if not inventory:
+        fails.append("RL406: paged-kernel VMEM cast inventory came back "
+                     "empty — the kernel-inlining path broke")
+    if any(f.severity != "advice" or f.rule != "RL406" for f in inventory):
+        fails.append("RL406: inventory entries must be RL406 advice")
+    return fails
+
+
 def run_selftests(include_traced: bool = True) -> List[str]:
     """Run every fixture; return failure descriptions (empty = all pass)."""
     fails: List[str] = []
@@ -418,4 +558,10 @@ def run_selftests(include_traced: bool = True) -> List[str]:
         fails += _selftest_rl101()
         fails += _selftest_rl102()
         fails += _selftest_rl103()
+        fails += _selftest_rl401()
+        fails += _selftest_rl402()
+        fails += _selftest_rl403()
+        fails += _selftest_rl404()
+        fails += _selftest_rl405()
+        fails += _selftest_rl406()
     return fails

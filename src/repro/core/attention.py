@@ -508,8 +508,11 @@ def full_attention_decode(q, cache: DenseCache, *, window=None, softcap=None):
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(hd)
     qg = q.reshape(B, Hkv, G, hd)
-    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
-                   cache.k.astype(jnp.float32)) * scale
+    # storage-dtype operands + f32 ACCUMULATION (same contract as the wave
+    # merge above): an explicit cache.astype(f32) is hoisted by XLA and
+    # rewrites the whole (B,H,S_max,hd) cache every step — RL402.
+    s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(cache.k.dtype), cache.k,
+                   preferred_element_type=jnp.float32) * scale
     s = soft_cap(s, softcap)
     pos = jnp.arange(cache.k.shape[2])
     ok = pos[None, :] < cache.length[:, None]              # (B, T)
@@ -517,5 +520,6 @@ def full_attention_decode(q, cache: DenseCache, *, window=None, softcap=None):
         ok = ok & (pos[None, :] > cache.length[:, None] - 1 - window)
     s = jnp.where(ok[:, None, None, :], s, NEG)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
+    out = jnp.einsum("bhgt,bhtd->bhgd", p.astype(cache.v.dtype), cache.v,
+                     preferred_element_type=jnp.float32)
     return out.reshape(B, Hq, hd).astype(q.dtype)

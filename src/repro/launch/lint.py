@@ -6,6 +6,7 @@
     python -m repro.launch.lint --selftest       # every rule vs its fixtures
     python -m repro.launch.lint --write-baseline # suppress current findings
     python -m repro.launch.lint --json           # machine-readable findings
+    python -m repro.launch.lint --json-out f.json  # also write JSON to a file
     python -m repro.launch.lint --github         # ::error workflow commands
 
 Exit status: 0 when no unsuppressed error-severity finding remains (advice
@@ -93,6 +94,10 @@ def main(argv: List[str] = None) -> int:
     ap.add_argument("--json", action="store_true", dest="as_json",
                     help="emit findings as a JSON object on stdout instead "
                          "of the human listing")
+    ap.add_argument("--json-out", metavar="PATH", default=None,
+                    help="additionally write the --json document to PATH "
+                         "(CI uploads it as the RL406 cast-site inventory "
+                         "artifact without a second gate run)")
     ap.add_argument("--github", action="store_true",
                     help="additionally emit GitHub Actions ::error/::notice "
                          "workflow commands (inline PR annotations)")
@@ -138,7 +143,10 @@ def main(argv: List[str] = None) -> int:
         vmem_budget=args.vmem_budget)
     if not args.no_trace:
         from repro.analysis.jaxpr_check import run_contract_checks
+        from repro.analysis.numerics_check import run_numerics_checks
         findings += run_contract_checks(verbose=log)
+        log("retrolint: retronum precision-flow pass (RL401-RL406)")
+        findings += run_numerics_checks(verbose=log)
 
     if args.write_baseline:
         write_baseline(baseline_path, findings)
@@ -151,14 +159,19 @@ def main(argv: List[str] = None) -> int:
     advice = [f for f in visible if f.severity != "error"]
     ordered = sorted(visible, key=lambda f: (f.path, f.line, f.rule))
     suppressed = len(findings) - len(visible)
+    doc = {"findings": [_finding_json(f) for f in ordered],
+           "errors": len(errors), "advice": len(advice),
+           "baselined": suppressed, "ok": not errors}
     if args.as_json:
-        print(json.dumps({
-            "findings": [_finding_json(f) for f in ordered],
-            "errors": len(errors), "advice": len(advice),
-            "baselined": suppressed, "ok": not errors}, indent=2))
+        print(json.dumps(doc, indent=2))
     else:
         for f in ordered:
             print(f.render())
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump(doc, fh, indent=2)
+            fh.write("\n")
+        log(f"retrolint: JSON findings written to {args.json_out}")
     if args.github:
         for f in ordered:
             print(_github_annotation(f))

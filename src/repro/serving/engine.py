@@ -348,6 +348,25 @@ SERVE_STAGES: Dict[str, Dict[str, Any]] = {
                                                  "adm_queue[*]"))),
 }
 
+# retronum (PR 10): the per-stage NUMERICS contract, checked by the
+# precision-flow pass (rules RL401-RL406, ``analysis/numerics_check.py``)
+# over every recorded stage trace. Schema (``analysis/README.md``):
+#   softmax — dtype floor for exp/log/LSE-chain transcendentals (RL401)
+#   accum   — dtype floor for dot_general accumulation       (RL402)
+#   narrow  — "output-only": the final astype(q.dtype) and same-dtype
+#             storage writes are the ONLY sanctioned narrowings
+#             (RL403/RL404); "free" opts a stage out
+# Every device stage runs under the default f32 contract; a stage needing
+# a different floor declares its own ``numerics=`` inline (setdefault
+# below respects it). Host control-plane steps hold no traced math, so
+# they carry no contract.
+NUMERICS_F32: Dict[str, str] = dict(softmax="float32", accum="float32",
+                                    narrow="output-only")
+for _contract in SERVE_STAGES.values():
+    if _contract["space"] == "device":
+        _contract.setdefault("numerics", NUMERICS_F32)
+del _contract
+
 
 @dataclass
 class _Admission:

@@ -42,6 +42,9 @@ def test_every_rule_has_fixture_or_traced_selftest():
     # RL301-RL305 are exercised by the schedule-fixture selftests
     # (selftest._selftest_rl30x, always-on in run_selftests).
     fixture_rules |= {"RL301", "RL302", "RL303", "RL304", "RL305"}
+    # RL401-RL406 are exercised by the retronum traced selftests
+    # (selftest._selftest_rl40x, run under include_traced).
+    fixture_rules |= {"RL401", "RL402", "RL403", "RL404", "RL405", "RL406"}
     # RL104 is advisory and exercised by the serve-level contract pass.
     assert set(RULES) - fixture_rules == {"RL104"}
 
@@ -286,3 +289,80 @@ def test_serve_contract_checks_hold():
     errors = [f.render() for f in findings if f.severity == "error"]
     assert not errors, "\n".join(errors)
     assert not findings, [f.render() for f in findings]  # no advice either
+
+
+# --------------------------------------------------- retronum (RL401-406)
+def test_repo_numerics_pass_is_clean():
+    """The curated bf16 decode traces (dense fallback, both zone walks, the
+    paged kernel, the LSE-merge path) carry zero precision-contract errors
+    — and the RL406 VMEM cast-site inventory is non-empty (the quantization
+    roadmap item hooks dequant into exactly these sites)."""
+    from repro.analysis.numerics_check import run_numerics_checks
+    findings = run_numerics_checks()
+    errors = [f.render() for f in findings if f.severity == "error"]
+    assert not errors, "\n".join(errors)
+    inventory = [f for f in findings if f.rule == "RL406"]
+    assert inventory, "paged-kernel cast-site inventory is empty"
+    assert all(f.severity == "advice" for f in inventory)
+    assert all("kernel.py" in f.path for f in inventory), \
+        [f.path for f in inventory]
+
+
+def test_numerics_catches_dense_cache_upcast():
+    """The exact bug the RL402 dense-path fix removed: whole-cache astype
+    upcasts before the einsums must trip the hoisted-cast rule."""
+    import jax
+    import jax.numpy as jnp
+    import math as pymath
+    from repro.analysis.numerics_check import numerics_findings
+    from repro.core.attention import DenseCache
+
+    def old_dense_decode(q, cache):                 # pre-PR-10 body
+        B, Hq, hd = q.shape
+        Hkv = cache.k.shape[1]
+        qg = q.reshape(B, Hkv, Hq // Hkv, hd)
+        s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                       cache.k.astype(jnp.float32)) / pymath.sqrt(hd)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
+        return out.reshape(B, Hq, hd).astype(q.dtype)
+
+    B, H, S, hd = 2, 4, 8192, 128
+    a = jax.ShapeDtypeStruct
+    cache = DenseCache(a((B, H, S, hd), jnp.bfloat16),
+                       a((B, H, S, hd), jnp.bfloat16), a((B,), jnp.int32))
+    fs = numerics_findings(old_dense_decode,
+                           (a((B, 2 * H, hd), jnp.bfloat16), cache),
+                           "old_dense_decode", path="x.py")
+    assert sum(f.rule == "RL402" for f in fs) >= 2, \
+        [f.render() for f in fs]
+
+
+def test_serve_stage_numerics_contracts():
+    """Every device stage declares the numerics contract (schema-checked);
+    host control-plane steps carry none."""
+    from repro.analysis.numerics_check import NumericsContract
+    from repro.serving.engine import SERVE_STAGES
+    for name, contract in SERVE_STAGES.items():
+        if contract["space"] == "device":
+            spec = contract.get("numerics")
+            assert spec is not None, f"{name}: device stage without numerics"
+            nc = NumericsContract.from_spec(spec)   # raises on bad keys
+            assert nc.narrow in ("output-only", "free"), name
+        else:
+            assert contract.get("numerics") is None, name
+
+
+def test_numerics_findings_surface_in_lint_json(tmp_path):
+    """--json-out writes the same JSON document the gate prints, so CI can
+    upload the RL406 inventory from the single gate run."""
+    import json as pyjson
+    root = _seed_tree(tmp_path, {
+        "src/repro/__init__.py": "",
+        "src/repro/ok.py": "x = 1\n"})
+    out_path = str(tmp_path / "inv.json")
+    assert lint_cli.main(["--root", root, "--no-trace", "-q", "--json",
+                          "--json-out", out_path]) == 0
+    with open(out_path) as fh:
+        doc = pyjson.load(fh)
+    assert doc["ok"] and doc["findings"] == []

@@ -418,3 +418,118 @@ def test_validity_mask_equals_physical_block_removal():
     removed = wave_attention_attend(q, state, retro, plan, slots, el, cs, vs,
                                     kv_src=(kb, vb, pb_dead), impl="jnp").out
     np.testing.assert_array_equal(np.asarray(masked), np.asarray(removed))
+
+
+# ---------------------------------------------------------------------------
+# retronum (PR 10) property tests: the numerics contract the RL4xx checker
+# certifies structurally, verified numerically on the real zone walk.
+# ---------------------------------------------------------------------------
+
+
+def test_online_softmax_fold_mass_conservation():
+    """Mass conservation across the sink/local/retrieved/estimation walk:
+    with every value vector == 1 (and vsum = size accordingly), the fold's
+    output is exactly num/den = 1 in f32 — any rescale that loses or
+    double-counts exp-weight mass (max updates, estimation-zone fold,
+    overflow correction) breaks the identity."""
+    from unittest import mock
+
+    from repro.core.attention import wave_attention_decode
+    from repro.kernels.wave_attention import ops as wa_ops
+
+    q, state, retro, plan = _paged_state(G=4, seed=11, retro_kw=dict(
+        retrieval_frac=0.1, estimation_frac=0.4))
+    ones = {f: jnp.ones_like(getattr(state, f))
+            for f in ("v_store", "sink_v", "local_v")}
+    vsum = state.size.astype(jnp.float32)[..., None] * jnp.ones_like(
+        state.vsum)
+    state = state._replace(vsum=vsum, **ones)
+
+    def fold(impl, emulate=None):
+        if emulate is None:
+            return wave_attention_decode(q, state, retro, plan,
+                                         impl=impl).out
+        orig = wa_ops.paged_wave_attention
+
+        def forced(*a, **k):
+            k["emulate"] = emulate
+            return orig(*a, **k)
+        with mock.patch.object(wa_ops, "paged_wave_attention", forced):
+            return wave_attention_decode(q, state, retro, plan,
+                                         impl="fused").out
+
+    for label, out in (("jnp", fold("jnp")),
+                       ("fused-emulation", fold("fused", emulate=True)),
+                       ("pallas-interpret", fold("fused", emulate=False))):
+        np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5,
+                                   err_msg=f"mass not conserved ({label})")
+
+
+def test_bf16_store_decode_divergence_bound():
+    """bf16 payload stores vs f32 stores through the full zone walk: the
+    meta index (centroids/vsum) stays f32, so ranking is identical and the
+    divergence is pure payload rounding — bounded by a few bf16 ulps of the
+    O(1)-magnitude attention output, and nonzero (the cast is real)."""
+    from repro.core.attention import wave_attention_decode
+
+    q, state, retro, plan = _paged_state(G=2, seed=23, retro_kw=dict(
+        retrieval_frac=0.1, estimation_frac=0.3))
+    payload = ("k_store", "v_store", "sink_k", "sink_v",
+               "local_k", "local_v")
+    state16 = state._replace(**{
+        f: getattr(state, f).astype(jnp.bfloat16) for f in payload})
+
+    for impl in ("jnp", "fused"):
+        o32 = wave_attention_decode(q, state, retro, plan, impl=impl).out
+        o16 = wave_attention_decode(q, state16, retro, plan, impl=impl).out
+        diff = np.max(np.abs(np.asarray(o32) - np.asarray(o16)))
+        assert 0.0 < diff < 5e-2, (impl, diff)
+
+
+def test_dense_decode_storage_dtype_bytes():
+    """RL402 dense-path regression (the retronum catch this PR fixed): the
+    storage-dtype + preferred_element_type decode must not instruct XLA
+    to materialise an f32 copy of the whole bf16 cache.  The CPU backend
+    upcasts bf16 dot operands itself post-fusion (so optimised-HLO bytes
+    tie), hence the discriminator is the *program-level* StableHLO: the
+    old body carries full-cache f32 converts, the fixed one none."""
+    import math
+    import re
+
+    from conftest import cost_bytes
+    from repro.core.attention import DenseCache, full_attention_decode
+
+    B, H, S, hd = 1, 2, 4096, 64
+    rng = np.random.default_rng(5)
+    cache = DenseCache(
+        jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.bfloat16),
+        jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.bfloat16),
+        jnp.full((B,), S // 2, jnp.int32))
+    q = jnp.asarray(rng.standard_normal((B, 2 * H, hd)), jnp.bfloat16)
+
+    def old_decode(q, cache):               # the pre-fix hoisted-cast body
+        Bq, Hq, hdq = q.shape
+        qg = q.reshape(Bq, H, Hq // H, hdq)
+        s = jnp.einsum("bhgd,bhtd->bhgt", qg.astype(jnp.float32),
+                       cache.k.astype(jnp.float32)) / math.sqrt(hdq)
+        pos = jnp.arange(cache.k.shape[2])
+        ok = pos[None, :] < cache.length[:, None]
+        s = jnp.where(ok[:, None, None, :], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgt,bhtd->bhgd", p, cache.v.astype(jnp.float32))
+        return out.reshape(Bq, Hq, hdq).astype(q.dtype)
+
+    low_new = jax.jit(full_attention_decode).lower(q, cache)
+    low_old = jax.jit(old_decode).lower(q, cache)
+    cast = re.compile(
+        rf"stablehlo\.convert[^\n]*->\s*tensor<{B}x{H}x{S}x{hd}xf32>")
+    assert not cast.search(low_new.as_text()), \
+        "fixed decode still upcasts the whole cache"
+    assert len(cast.findall(low_old.as_text())) == 2  # k and v upcasts
+    c_new = low_new.compile()
+    c_old = low_old.compile()
+    assert cost_bytes(c_new) <= cost_bytes(c_old), \
+        (cost_bytes(c_new), cost_bytes(c_old))
+    np.testing.assert_allclose(
+        np.asarray(c_new(q, cache), np.float32),
+        np.asarray(c_old(q, cache), np.float32), atol=3e-2, rtol=3e-2)
